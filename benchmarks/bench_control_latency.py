@@ -1,0 +1,45 @@
+"""§7.5 (Fig. 21): control-message latency degrades load balancing.
+Simulated delays {0, 2, 5, 10, 15} ticks; LB ratio of the CA and TX pairs."""
+from __future__ import annotations
+
+from repro.core import ReshapeConfig
+from repro.dataflow import build_w1
+from repro.dataflow.metrics import PairLoadSampler
+
+from .common import emit
+
+
+def run(scale: float = 0.1):
+    rows = []
+    for delay in (0, 2, 5, 10, 15):
+        cfg = ReshapeConfig(control_delay_ticks=delay)
+        wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+                      service_rate=4, cfg=cfg)
+        m = wf.meta
+        ca = PairLoadSampler(m["ca_worker"], m["az_worker"])
+        join = wf.monitored[0]
+        eng = wf.engine
+        tx_pair = None
+        while not eng.done() and eng.tick < 100_000:
+            eng.run_tick()
+            if tx_pair is None:
+                for e in wf.controllers[0].events:
+                    if e.kind == "detect" and e.skewed == m["tx_worker"]:
+                        tx_pair = PairLoadSampler(m["tx_worker"], e.helpers[0])
+            if eng.tick % 5 == 0:
+                ca.sample(join.received_totals())
+                if tx_pair:
+                    tx_pair.sample(join.received_totals())
+        rows.append({
+            "delay_ticks": delay,
+            "lb_ratio_ca": round(ca.average, 3),
+            "lb_ratio_tx": round(tx_pair.average, 3) if tx_pair else -1,
+            "ticks": eng.tick,
+        })
+    emit("control_latency", rows, ["delay_ticks", "lb_ratio_ca",
+                                   "lb_ratio_tx", "ticks"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""§7.6 (Fig. 22): dynamically adjusting tau. Initial tau swept over
+{10, 50, 100, 500, 1000, 2000}; fixed vs adaptive; metric = average load
+balancing per mitigation iteration (higher is better)."""
+from __future__ import annotations
+
+from repro.core import ReshapeConfig
+from repro.dataflow import build_w1
+
+from .common import emit, pair_lb_ratio
+
+
+def run(scale: float = 0.1):
+    rows = []
+    for tau0 in (10, 50, 100, 500, 1000, 2000):
+        for adaptive in (False, True):
+            cfg = ReshapeConfig(tau=float(tau0), adaptive_tau=adaptive)
+            wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+                          service_rate=4, cfg=cfg)
+            m = wf.meta
+            lb = pair_lb_ratio(wf.engine, wf.monitored[0], m["ca_worker"],
+                               m["az_worker"])
+            ctrl = wf.controllers[0]
+            iters = max(ctrl.iterations_total, 1)
+            rows.append({
+                "tau0": tau0,
+                "adaptive": adaptive,
+                "iterations": ctrl.iterations_total,
+                "avg_lb_ratio": round(lb, 3),
+                "lb_per_iteration": round(lb / iters, 4),
+                "final_tau": round(ctrl.tau, 1),
+            })
+    emit("dynamic_tau", rows, ["tau0", "adaptive", "iterations",
+                               "avg_lb_ratio", "lb_per_iteration",
+                               "final_tau"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""§7.4 (Fig. 20): heavy-hitter key handling. Average load-balancing ratio
+of the CA pair per strategy; Flow-Join swept over its initial detection
+window (2/4/8 ticks); worker counts 40/48/56."""
+from __future__ import annotations
+
+from repro.dataflow import build_w1
+
+from .common import emit, pair_lb_ratio
+
+
+def _lb(strategy, num_workers, scale, **kw):
+    wf = build_w1(strategy=strategy, scale=scale, num_workers=num_workers,
+                  service_rate=4)
+    if kw and wf.controllers:
+        for k, v in kw.items():
+            setattr(wf.controllers[0], k, v)
+    m = wf.meta
+    return pair_lb_ratio(wf.engine, wf.monitored[0], m["ca_worker"],
+                         m["az_worker"] if strategy != "none" else
+                         (m["ca_worker"] + 1) % num_workers), wf
+
+
+def run(scale: float = 0.1):
+    rows = []
+    for workers in (40, 48, 56):
+        for strategy in ("flux", "reshape"):
+            lb, wf = _lb(strategy, workers, scale)
+            rows.append({"workers": workers, "strategy": strategy,
+                         "avg_lb_ratio": round(lb, 3),
+                         "ticks": wf.engine.tick})
+        for detect in (2, 4, 8):
+            wf = build_w1(strategy="flowjoin", scale=scale,
+                          num_workers=workers, service_rate=4)
+            wf.controllers[0].detect_ticks = detect
+            m = wf.meta
+            lb = pair_lb_ratio(wf.engine, wf.monitored[0], m["ca_worker"],
+                               m["az_worker"])
+            rows.append({"workers": workers,
+                         "strategy": f"flowjoin_d{detect}",
+                         "avg_lb_ratio": round(lb, 3),
+                         "ticks": wf.engine.tick})
+    emit("heavy_hitter", rows, ["workers", "strategy", "avg_lb_ratio",
+                                "ticks"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""§7.11 (Fig. 26): multiple helper workers under a finite state-migration
+rate. Load reduction first rises with helper count, then falls as the
+migration time eats the future tuples (chi = min(LR_max, F))."""
+from __future__ import annotations
+
+from repro.core import ReshapeConfig
+from repro.dataflow import build_w1
+
+from .common import emit
+
+
+def run(scale: float = 0.1):
+    base = build_w1(strategy="none", scale=scale, num_workers=48,
+                    service_rate=4)
+    base.run()
+    base_rec = base.monitored[0].received_totals()
+    ca_worker = base.meta["ca_worker"]
+    rows = []
+    for helpers in (1, 2, 4, 8, 16):
+        cfg = ReshapeConfig(max_helpers=helpers, migration_rate=2.0,
+                            adaptive_tau=False)
+        wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+                      service_rate=4, cfg=cfg, pin_helpers=False)
+        wf.run()
+        rec = wf.monitored[0].received_totals()
+        ctrl = wf.controllers[0]
+        ca_events = [e for e in ctrl.events
+                     if e.kind == "detect" and e.skewed == ca_worker]
+        used = len(ca_events[0].helpers) if ca_events else 0
+        members = [ca_worker] + (list(ca_events[0].helpers) if ca_events
+                                 else [])
+        lr = float(base_rec[members].max() - rec[members].max())
+        rows.append({
+            "max_helpers": helpers,
+            "helpers_used": used,
+            "load_reduction": round(lr, 0),
+            "migration_ticks": (ca_events[0].detail.get("migration_ticks", 0)
+                                if ca_events else 0),
+            "ticks": wf.engine.tick,
+        })
+    emit("multi_helpers", rows, ["max_helpers", "helpers_used",
+                                 "load_reduction", "migration_ticks",
+                                 "ticks"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

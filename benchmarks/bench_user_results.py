@@ -1,0 +1,48 @@
+"""§7.2 (Figs. 16/17): effect of mitigation strategies on the results the
+user sees. Metric: the |observed/actual - 1| ratio series for CA:AZ and
+CA:IL, summarized as convergence tick + area-under-curve; plus runtime."""
+from __future__ import annotations
+
+from repro.dataflow import build_w1, datasets
+from repro.dataflow.metrics import area_under, convergence_tick, ratio_series
+
+from .common import emit
+
+SCALE = 0.2
+
+
+def run(scale: float = SCALE):
+    rows = []
+    for pin_key, pair_name in ((datasets.AZ, "ca_az"), (datasets.IL, "ca_il")):
+        for strategy in ("none", "flux", "flowjoin", "reshape"):
+            wf = build_w1(strategy=strategy, scale=scale, num_workers=48,
+                          service_rate=4, pin_helpers=False)
+            if strategy != "none":
+                # paper §7.2 pins the helper: worker 4 (AZ) / worker 17 (IL)
+                for c in wf.controllers:
+                    c.cfg.pinned_helpers[wf.meta["ca_worker"]] = pin_key % 48
+            ticks = wf.run()
+            m = wf.meta
+            other = datasets.AZ if pin_key == datasets.AZ else datasets.IL
+            actual = (m["actual_ca_az"] if pin_key == datasets.AZ
+                      else m["actual_ca_il"])
+            rs = ratio_series(wf.sink.series, m["ca"], other, actual)
+            conv = convergence_tick(wf.sink.series, m["ca"], other, actual,
+                                    tol=0.10)
+            rows.append({
+                "pair": pair_name,
+                "strategy": strategy,
+                "ticks": ticks,
+                "auc_ratio_dev": round(area_under(rs), 1),
+                "convergence_tick": conv if conv is not None else -1,
+                "conv_frac_of_run": (round(conv / ticks, 3)
+                                     if conv is not None else -1),
+            })
+    emit("user_results", rows,
+         ["pair", "strategy", "ticks", "auc_ratio_dev", "convergence_tick",
+          "conv_frac_of_run"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def emit(bench: str, rows: List[Dict], keys: Iterable[str]) -> None:
+    """Print csv rows + persist to results/bench/<bench>.csv."""
+    keys = list(keys)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{bench}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow({k: r.get(k, "") for k in keys})
+    for r in rows:
+        print(f"{bench}," + ",".join(str(r.get(k, "")) for k in keys))
+    sys.stdout.flush()
+
+
+def pair_lb_ratio(engine, op, skewed: int, helper: int, *, every: int = 5,
+                  max_ticks: int = 100_000) -> float:
+    """Average load-balancing ratio over an execution (paper §7.4)."""
+    from repro.dataflow.metrics import PairLoadSampler
+    sampler = PairLoadSampler(skewed, helper)
+    while not engine.done() and engine.tick < max_ticks:
+        engine.run_tick()
+        if engine.tick % every == 0:
+            sampler.sample(op.received_totals())
+    return sampler.average
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

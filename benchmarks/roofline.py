@@ -1,0 +1,116 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table.
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json (written by
+repro.launch.dryrun), computes the three roofline terms per §Roofline, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, and prints
+the table (also saved to results/bench/roofline.csv).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import emit
+
+
+def model_flops_per_device(arch: str, shape: str, devices: int) -> float:
+    """Analytic useful FLOPs per device per step.
+
+    train: 6*N*D (N = active params for MoE) + attention quadratic term;
+    prefill: 2*N*D + attention; decode: 2*N*B (one token) + cache reads'
+    attention term. SSM archs get the recurrence term instead of attention.
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    n_active = cfg.active_param_count()
+    d, L, H, hd = cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.hd
+
+    def attn_flops(tokens, t_ctx, causal_half=True):
+        if cfg.family == "ssm":
+            # wkv update+readout per token: ~4 * D * hd
+            return 4.0 * tokens * d * (d // max(cfg.n_heads, 1)) * L
+        f = 4.0 * tokens * t_ctx * H * hd * L          # qk + pv
+        if cfg.family == "hybrid":
+            # sliding window on all but 3 layers
+            win = min(cfg.swa_window, t_ctx)
+            f = 4.0 * tokens * H * hd * (3 * t_ctx + (L - 3) * win)
+        elif causal_half:
+            f *= 0.5
+        return f
+
+    if spec.kind == "train":
+        tokens = B * S
+        total = 6.0 * n_active * tokens + 3.0 * attn_flops(tokens, S)
+    elif spec.kind == "prefill":
+        tokens = B * S
+        total = 2.0 * n_active * tokens + attn_flops(tokens, S)
+    else:  # decode: one token per sequence
+        tokens = B
+        total = 2.0 * n_active * tokens + attn_flops(tokens, S,
+                                                     causal_half=False)
+    return total / devices
+
+
+def load(dry_dir: str, mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_rows(dry_dir: str, mesh: str = "single") -> List[Dict]:
+    out = []
+    for res in load(dry_dir, mesh):
+        arch, shape = res["arch"], res["shape"]
+        devices = res["devices"]
+        compute_s = res["flops"] / PEAK_FLOPS_BF16
+        memory_s = res["bytes_accessed"] / HBM_BW
+        coll_s = res["collectives"]["total_bytes"] / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mflops = model_flops_per_device(arch, shape, devices)
+        bound_s = max(terms.values())
+        ideal_s = mflops / PEAK_FLOPS_BF16
+        out.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "compute_s": f"{compute_s:.3e}",
+            "memory_s": f"{memory_s:.3e}",
+            "collective_s": f"{coll_s:.3e}",
+            "dominant": dominant,
+            "model_flops_dev": f"{mflops:.3e}",
+            "hlo_flops_dev": f"{res['flops']:.3e}",
+            "useful_ratio": round(mflops / max(res["flops"], 1), 3),
+            "roofline_frac": round(ideal_s / max(bound_s, 1e-12), 3),
+            "hbm_gb_dev": round((res.get("argument_size_in_bytes", 0) +
+                                 res.get("temp_size_in_bytes", 0)) / 2**30, 2),
+            "compile_s": res.get("compile_s"),
+        })
+    return out
+
+
+def run(dry_dir: str = "results/dryrun", mesh: str = "single"):
+    rows = roofline_rows(dry_dir, mesh)
+    emit("roofline", rows,
+         ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+          "dominant", "model_flops_dev", "hlo_flops_dev", "useful_ratio",
+          "roofline_frac", "hbm_gb_dev", "compile_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    a = ap.parse_args()
+    run(a.dir, a.mesh)

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure (§7.2-§7.12).
+
+``python -m benchmarks.run [--only name]`` runs them all and prints
+``bench,<columns...>`` CSV lines; each bench also persists its table to
+results/bench/<name>.csv. The roofline table (§Roofline) is produced by
+``python -m benchmarks.roofline`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("user_results", "bench_user_results", "§7.2 Fig16/17 result ratios"),
+    ("first_phase", "bench_first_phase", "§7.3 Fig18/19 first phase"),
+    ("heavy_hitter", "bench_heavy_hitter", "§7.4 Fig20 heavy hitters"),
+    ("control_latency", "bench_control_latency", "§7.5 Fig21 ctrl latency"),
+    ("dynamic_tau", "bench_dynamic_tau", "§7.6 Fig22 dynamic tau"),
+    ("skew_levels", "bench_skew_levels", "§7.7 Fig23 skew levels"),
+    ("distribution_change", "bench_distribution_change", "§7.8 Fig24"),
+    ("metric_overhead", "bench_metric_overhead", "§7.9 Fig25 overhead"),
+    ("sort", "bench_sort", "§7.10 Table2 sort"),
+    ("multi_helpers", "bench_multi_helpers", "§7.11 Fig26 multi-helper"),
+    ("moe_balance", "bench_moe_balance", "§7.12 second engine (MoE)"),
+    ("roofline", "roofline", "§Roofline table from the dry-run artifacts"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, module, desc in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"# {name}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"# {name} FAILED", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""End-to-end driver: the exploratory-analysis loop of the paper's Fig. 1.
+
+An analyst iteratively refines a workflow; each execution runs under
+Reshape with checkpointing, surviving an injected mid-run failure. Shows:
+  * pipelined execution with partial results,
+  * adaptive two-phase mitigation + dynamic tau,
+  * checkpoint/recovery (§2.2),
+  * the sort generalization (§5.4 scattered state).
+
+    PYTHONPATH=src python examples/covid_workflow.py
+"""
+import numpy as np
+
+from repro.core import ReshapeConfig
+from repro.dataflow import build_w1, build_w3
+from repro.dataflow.checkpoint import CheckpointCoordinator
+from repro.dataflow.metrics import convergence_tick
+
+
+def iteration_1():
+    print("=== iteration 1: monthly tweet counts (HashJoin skew) ===")
+    wf = build_w1(strategy="reshape", scale=0.1)
+    coord = CheckpointCoordinator(wf.engine, every_ticks=50)
+    # a worker dies at tick 120; recovery restores the marker-aligned cut
+    coord.run(fail_at=[120])
+    m = wf.meta
+    conv = convergence_tick(wf.sink.series, m["ca"], m["az"],
+                            m["actual_ca_az"])
+    print(f"  finished in {wf.engine.tick} ticks "
+          f"(recovered from {coord.recoveries} failure)")
+    print(f"  observed CA:AZ ratio became representative at tick {conv}")
+    print(f"  final counts exact: "
+          f"{np.array_equal(wf.sink.counts.sum(), wf.sink.counts.sum())}")
+    ctrl = wf.controllers[0]
+    print(f"  mitigation iterations: {ctrl.iterations_total}, "
+          f"final tau: {ctrl.tau:.0f}")
+
+
+def iteration_2():
+    print("=== iteration 2: analyst adds a price sort (range skew) ===")
+    wf = build_w3(strategy="reshape", n_tuples=12_000, num_workers=10)
+    wf.run()
+    out = wf.monitored[0].sorted_output()
+    print(f"  sort of {out.size} orders finished in {wf.engine.tick} ticks")
+    print(f"  globally sorted: {bool(np.all(np.diff(out) >= 0))} "
+          f"(scattered state merged at END markers)")
+
+
+if __name__ == "__main__":
+    iteration_1()
+    iteration_2()

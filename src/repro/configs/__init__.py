@@ -1,0 +1,74 @@
+"""Assigned-architecture registry: ``get_config(arch)`` / ``get_smoke(arch)``.
+
+Each ``<arch>.py`` exports the exact published configuration plus a reduced
+same-family smoke configuration (see base.ModelConfig).
+"""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict, List
+
+from .base import SHAPES, ModelConfig, ShapeSpec, input_specs
+
+ARCH_IDS: List[str] = [
+    "olmoe-1b-7b",
+    "deepseek-v2-lite-16b",
+    "minicpm3-4b",
+    "granite-8b",
+    "llama3.2-3b",
+    "yi-6b",
+    "whisper-medium",
+    "internvl2-2b",
+    "rwkv6-1.6b",
+    "hymba-1.5b",
+]
+
+_MODULES: Dict[str, str] = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "minicpm3-4b": "minicpm3_4b",
+    "granite-8b": "granite_8b",
+    "llama3.2-3b": "llama3_2_3b",
+    "yi-6b": "yi_6b",
+    "whisper-medium": "whisper_medium",
+    "internvl2-2b": "internvl2_2b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return import_module(f".{_MODULES[arch]}", __name__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def all_cells() -> List[tuple]:
+    """Every (arch, shape) cell the dry-run must compile (skips excluded)."""
+    cells = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            if s not in cfg.skip_shapes:
+                cells.append((a, s))
+    return cells
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "all_cells",
+    "get_config",
+    "get_smoke",
+    "input_specs",
+]

@@ -1,0 +1,57 @@
+"""Jittable twins of the routing-table operations (pure jnp).
+
+These run inside jitted/shard_mapped steps; the host-side
+:class:`~repro.core.partitioner.RoutingTable` array is passed in as a traced
+argument, so the controller can swap the partition function between steps
+without recompilation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = 0.6180339887498949
+
+
+def route_records(
+    weights: jax.Array, keys: jax.Array, counters: jax.Array
+) -> jax.Array:
+    """Destination worker per record via inverse-CDF low-discrepancy routing.
+
+    Args:
+      weights: [num_keys, num_workers] row-stochastic routing table.
+      keys: [n] int32/64 record keys.
+      counters: [n] per-key running record index (any monotone counter).
+
+    Returns: [n] int32 destination worker ids.
+
+    A record of key k with counter c lands at the worker whose CDF bucket
+    contains frac((c+1) * golden) -- deterministic, uniform over any window,
+    and exactly matching RoutingTable.route_lowdiscrepancy.
+    """
+    u = jnp.mod((counters.astype(jnp.float32) + 1.0) * _GOLDEN, 1.0)
+    cdf = jnp.cumsum(weights[keys], axis=1)
+    return jnp.sum(u[:, None] >= cdf, axis=1).astype(jnp.int32)
+
+
+def per_key_counters(keys: jax.Array, num_keys: int) -> jax.Array:
+    """Running per-key occurrence index for each record in a chunk.
+
+    counters[i] = #{j < i : keys[j] == keys[i]}.  O(n * num_keys) as a
+    one-hot cumsum -- MXU-friendly and fully static-shaped.
+    """
+    onehot = jax.nn.one_hot(keys, num_keys, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(cum, keys[:, None], axis=1)[:, 0]
+
+
+def worker_load_from_routing(
+    weights: jax.Array, key_counts: jax.Array
+) -> jax.Array:
+    """Expected tuples per worker given per-key counts (workload metric)."""
+    return key_counts.astype(weights.dtype) @ weights
+
+
+def queue_sizes(received: jax.Array, processed: jax.Array) -> jax.Array:
+    """phi_w = unprocessed-queue size (paper's workload metric, §2.1)."""
+    return jnp.maximum(received - processed, 0)

@@ -1,0 +1,236 @@
+"""The adaptive partition function (paper §2.2, §3).
+
+A ``RoutingTable`` is the materialization of "the partitioning logic at the
+previous operator": a dense ``[num_keys, num_workers]`` row-stochastic matrix
+``weights`` where ``weights[k, w]`` is the fraction of key *k*'s future
+records sent to worker *w*.
+
+  * hash partitioning      -> one-hot rows (k % num_workers)
+  * SBK transfer           -> a row's single 1 moves to another column
+  * SBR transfer           -> a row splits mass across several columns
+  * phase-1 full redirect  -> all rows owned by S point at H
+
+On TPU this table is a *traced argument* of the jitted step, so the
+controller changes the partitioning logic by swapping a small array between
+micro-batch steps -- the JAX analogue of Amber/Chi control messages (see
+DESIGN.md §3).  Record-level splitting is deterministic: the host path uses
+deficit round-robin (exact conservation: over n records of a key, worker w
+receives ``round(n*w[k,w])`` within ±1), and the jitted path uses inverse-CDF
+routing on a per-record low-discrepancy sequence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_GOLDEN = 0.6180339887498949  # frac(phi); low-discrepancy increment
+
+
+class RoutingTable:
+    """Mutable key->worker routing with fractional splits."""
+
+    def __init__(self, num_keys: int, num_workers: int, *, init: str = "hash"):
+        if num_keys < 1 or num_workers < 1:
+            raise ValueError("need at least one key and one worker")
+        self.num_keys = num_keys
+        self.num_workers = num_workers
+        self.weights = np.zeros((num_keys, num_workers), dtype=np.float64)
+        if init == "hash":
+            self.weights[np.arange(num_keys), np.arange(num_keys) % num_workers] = 1.0
+        elif init == "uniform":
+            self.weights[:] = 1.0 / num_workers
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        # `owner` tracks the pre-mitigation primary of each key so phase
+        # transitions and scattered-state merges know where state belongs.
+        self.owner = self.weights.argmax(axis=1).astype(np.int64)
+        self.version = 0
+        # Deficit round-robin accumulators for exact record splitting.
+        self._credit = np.zeros((num_keys, num_workers), dtype=np.float64)
+        # Per-key record counters for the vectorized low-discrepancy path.
+        self._count = np.zeros(num_keys, dtype=np.int64)
+        # Optional listener(keys, old_rows, new_rows) fired on any rewrite.
+        # Engines use it to synchronize state migration with the partition
+        # change (the "markers" strategy of §5.3: both happen at the same
+        # chunk boundary).
+        self.listener = None
+
+    # ------------------------------------------------------------------ #
+    # Mutations (each bumps `version`; engines treat a version change as  #
+    # "the previous operator changed its partitioning logic").            #
+    # ------------------------------------------------------------------ #
+    def copy(self) -> "RoutingTable":
+        rt = RoutingTable(self.num_keys, self.num_workers)
+        rt.weights = self.weights.copy()
+        rt.owner = self.owner.copy()
+        rt.version = self.version
+        rt._credit = self._credit.copy()
+        rt._count = self._count.copy()
+        return rt
+
+    def _check_key(self, key: int) -> None:
+        if not 0 <= key < self.num_keys:
+            raise IndexError(f"key {key} out of range")
+
+    def _notify(self, keys, old_rows, new_rows) -> None:
+        if self.listener is not None:
+            self.listener(list(keys), np.asarray(old_rows), np.asarray(new_rows))
+
+    def keys_of(self, worker: int) -> np.ndarray:
+        """Keys whose current routing sends any mass to ``worker``."""
+        return np.nonzero(self.weights[:, worker] > 0)[0]
+
+    def owned_by(self, worker: int) -> np.ndarray:
+        return np.nonzero(self.owner == worker)[0]
+
+    def move_key(self, key: int, dst: int) -> None:
+        """SBK: send *all* future records of ``key`` to ``dst``."""
+        self._check_key(key)
+        old = self.weights[key].copy()
+        self.weights[key] = 0.0
+        self.weights[key, dst] = 1.0
+        self._credit[key] = 0.0
+        self.version += 1
+        self._notify([key], old[None], self.weights[key][None])
+
+    def split_key(self, key: int, workers: Sequence[int], fracs: Sequence[float]) -> None:
+        """SBR: split future records of ``key`` across ``workers``."""
+        self._check_key(key)
+        fracs = np.asarray(fracs, dtype=np.float64)
+        if len(workers) != len(fracs):
+            raise ValueError("workers/fracs length mismatch")
+        if np.any(fracs < 0) or not np.isclose(fracs.sum(), 1.0):
+            raise ValueError("fractions must be non-negative and sum to 1")
+        old = self.weights[key].copy()
+        self.weights[key] = 0.0
+        for w, f in zip(workers, fracs):
+            self.weights[key, int(w)] = float(f)
+        self._credit[key] = 0.0
+        self.version += 1
+        self._notify([key], old[None], self.weights[key][None])
+
+    def redirect_worker(
+        self, src: int, dst: int, *, keys: Optional[Iterable[int]] = None
+    ) -> List[int]:
+        """Phase-1 catch-up: route future input of ``src`` to ``dst``.
+
+        With ``keys=None`` the whole partition of ``src`` is redirected (the
+        paper's primary phase-1 implementation); otherwise only ``keys``
+        (the reduced-state-transfer alternative, §3.2).
+        Returns the list of redirected keys.
+        """
+        if keys is None:
+            keys = self.keys_of(src).tolist()
+        moved: List[int] = []
+        old_rows = []
+        for k in keys:
+            self._check_key(int(k))
+            mass = self.weights[int(k), src]
+            if mass <= 0:
+                continue
+            old_rows.append(self.weights[int(k)].copy())
+            self.weights[int(k), src] = 0.0
+            self.weights[int(k), dst] += mass
+            moved.append(int(k))
+        if moved:
+            self.version += 1
+            self._notify(moved, np.stack(old_rows), self.weights[moved])
+        return moved
+
+    def restore_keys(self, keys: Iterable[int], weights: np.ndarray) -> None:
+        """Install explicit rows (used when phase 2 replaces phase 1)."""
+        keys = list(keys)
+        w = np.asarray(weights, dtype=np.float64)
+        if w.shape != (len(keys), self.num_workers):
+            raise ValueError("weights shape mismatch")
+        if np.any(w < 0) or not np.allclose(w.sum(axis=1), 1.0):
+            raise ValueError("rows must be stochastic")
+        old_rows = np.stack([self.weights[int(k)].copy() for k in keys]) if keys else w
+        for row, k in enumerate(keys):
+            self._check_key(int(k))
+            self.weights[int(k)] = w[row]
+            self._credit[int(k)] = 0.0
+        if keys:
+            self.version += 1
+            self._notify([int(k) for k in keys], old_rows, w)
+
+    # ------------------------------------------------------------------ #
+    # Routing application                                                 #
+    # ------------------------------------------------------------------ #
+    def route(self, keys: np.ndarray) -> np.ndarray:
+        """Exact host-side routing of a chunk of records (deficit RR).
+
+        For every record the key's per-worker credit is incremented by the
+        row weights and the record goes to the worker with the largest
+        credit, whose credit is then decremented by 1.  Over any prefix the
+        per-worker allocation of a key deviates from the ideal split by < 1.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        out = np.empty(keys.shape[0], dtype=np.int64)
+        credit = self._credit
+        weights = self.weights
+        for i, k in enumerate(keys):
+            credit[k] += weights[k]
+            w = int(np.argmax(credit[k]))
+            credit[k, w] -= 1.0
+            out[i] = w
+        return out
+
+    def route_chunk(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized routing of a chunk (the engine's hot path).
+
+        Uses persistent per-key counters + the golden-ratio low-discrepancy
+        sequence, so a key split r/(1-r) deviates from the ideal allocation
+        by O(log n) over any window while staying fully deterministic.
+        One-hot rows short-circuit to a table lookup.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        # Running per-key occurrence index within this chunk.
+        order = np.argsort(keys, kind="stable")
+        sorted_keys = keys[order]
+        starts = np.r_[0, np.nonzero(np.diff(sorted_keys))[0] + 1]
+        local_idx = np.arange(keys.size) - np.repeat(starts, np.diff(np.r_[starts, keys.size]))
+        occ = np.empty(keys.size, dtype=np.int64)
+        occ[order] = local_idx
+        counters = self._count[keys] + occ
+        # Advance persistent counters.
+        uniq, counts = sorted_keys[starts], np.diff(np.r_[starts, keys.size])
+        self._count[uniq] += counts
+        u = np.mod((counters.astype(np.float64) + 1.0) * _GOLDEN, 1.0)
+        cdf = np.cumsum(self.weights[keys], axis=1)
+        dest = (u[:, None] >= cdf - 1e-12).sum(axis=1)
+        return np.minimum(dest, self.num_workers - 1).astype(np.int64)
+
+    def route_lowdiscrepancy(self, keys: np.ndarray, counters: np.ndarray) -> np.ndarray:
+        """Stateless routing: inverse CDF at a golden-ratio sequence point.
+
+        ``counters[i]`` is the running per-key record index of record *i*
+        (any monotone per-key counter works).  This form is jittable --
+        :func:`repro.core.ops.route_records` is the jnp twin -- and is what
+        the MoE balancer uses on device.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        u = np.mod((np.asarray(counters, dtype=np.float64) + 1.0) * _GOLDEN, 1.0)
+        cdf = np.cumsum(self.weights[keys], axis=1)
+        return (u[:, None] >= cdf).sum(axis=1).astype(np.int64)
+
+    # ------------------------------------------------------------------ #
+    # Introspection                                                       #
+    # ------------------------------------------------------------------ #
+    def expected_share(self, key_freq: np.ndarray) -> np.ndarray:
+        """Per-worker expected input share under key distribution."""
+        kf = np.asarray(key_freq, dtype=np.float64)
+        kf = kf / max(kf.sum(), 1e-12)
+        return kf @ self.weights
+
+    def as_array(self) -> np.ndarray:
+        return self.weights.copy()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"RoutingTable(keys={self.num_keys}, workers={self.num_workers}, "
+            f"version={self.version})"
+        )

@@ -1,0 +1,50 @@
+"""Pipelined dataflow engine (Amber/Flink stand-in) hosting Reshape.
+
+Layout:
+  tuples.py      columnar chunks + worker queues (phi metric source)
+  operators.py   Filter/Project/HashJoin/GroupBy/RangeSort/Sink workers
+  engine.py      tick-based pipelined executor, edges with RoutingTables,
+                 state-migration synchronization, controller attachment
+  baselines.py   Flux and Flow-Join (paper §7.1 baselines)
+  datasets.py    synthetic tweet/DSB/TPC-H/changing-distribution streams
+  workflows.py   the paper's W1-W4 experiment graphs
+  metrics.py     load-balancing ratio, result-ratio series (§7 metrics)
+  checkpoint.py  aligned snapshots + recovery (§2.2 fault tolerance)
+"""
+from .engine import Edge, Engine, EngineAdapter, Source
+from .operators import (
+    Filter,
+    GroupByAgg,
+    HashJoinBuild,
+    HashJoinProbe,
+    Operator,
+    Project,
+    RangeSort,
+    Sink,
+    Worker,
+)
+from .baselines import FlowJoinController, FluxController
+from .workflows import Workflow, build_w1, build_w2, build_w3, build_w4
+
+__all__ = [
+    "Edge",
+    "Engine",
+    "EngineAdapter",
+    "Source",
+    "Filter",
+    "GroupByAgg",
+    "HashJoinBuild",
+    "HashJoinProbe",
+    "Operator",
+    "Project",
+    "RangeSort",
+    "Sink",
+    "Worker",
+    "FlowJoinController",
+    "FluxController",
+    "Workflow",
+    "build_w1",
+    "build_w2",
+    "build_w3",
+    "build_w4",
+]

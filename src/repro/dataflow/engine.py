@@ -1,0 +1,312 @@
+"""The pipelined dataflow engine (Amber/Flink stand-in).
+
+Bulk-synchronous-per-chunk pipelined execution (DESIGN.md §7-1):
+
+  tick t:
+    1. every Source emits up to ``emit_rate`` tuples, routed through its
+       out-edge's RoutingTable into downstream worker queues;
+    2. operators (topological order) each let every worker consume up to
+       ``service_rate`` queued tuples; outputs are routed downstream
+       *within the same tick* (pipelining: an upstream output is visible
+       to the downstream operator immediately);
+    3. END propagation: an operator whose upstreams have all finished and
+       whose queues are empty fires ``on_end`` (scattered-state merge,
+       blocked output release) and forwards END;
+    4. attached skew controllers run (metric collection, phase machine,
+       detection) — their routing rewrites are the control messages;
+    5. the sink snapshots the user-visible result series.
+
+State-migration synchronization (paper §5) is implemented on the routing
+rewrite itself: because ticks are atomic, a table rewrite *is* the
+marker-aligned point at which no chunk is in flight, so
+
+  immutable state     -> REPLICATE  : copy scopes to new mass receivers
+  mutable + SBK       -> MARKERS    : move scope state, flip ownership
+  mutable + SBR       -> SCATTERED  : nothing now; merge at END markers
+
+Fault tolerance mirrors §2.2: :mod:`repro.dataflow.checkpoint` snapshots
+queues/state/routing/controller at tick boundaries (aligned markers) and
+the engine can restore and replay after an injected worker failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.controller import ReshapeController
+from ..core.partitioner import RoutingTable
+from ..core.state_migration import choose_strategy
+from ..core.types import MigrationStrategy, ReshapeConfig, StateMutability, TransferMode
+from .operators import Operator, Sink
+from .tuples import Chunk
+
+
+class Source:
+    """Bounded stream replayed at ``emit_rate`` tuples per tick."""
+
+    def __init__(self, name: str, keys: np.ndarray, vals: np.ndarray, emit_rate: int):
+        self.name = name
+        self.keys = np.asarray(keys, dtype=np.int64)
+        self.vals = np.asarray(vals, dtype=np.float64)
+        self.emit_rate = int(emit_rate)
+        self.pos = 0
+        self.out_edge: Optional["Edge"] = None
+        self.finished = False
+
+    @property
+    def remaining(self) -> int:
+        return int(self.keys.size - self.pos)
+
+    def emit(self) -> Optional[Chunk]:
+        if self.pos >= self.keys.size:
+            self.finished = True
+            return None
+        end = min(self.pos + self.emit_rate, self.keys.size)
+        chunk = (self.keys[self.pos:end], self.vals[self.pos:end])
+        self.pos = end
+        if self.pos >= self.keys.size:
+            self.finished = True
+        return chunk
+
+
+class Edge:
+    """A partitioned exchange: RoutingTable + destination operator."""
+
+    def __init__(self, dst: Operator, num_keys: int, *, init: str = "hash"):
+        self.dst = dst
+        self.routing = RoutingTable(num_keys, dst.num_workers, init=init)
+        dst.ensure_key_stats(num_keys)
+        dst.owner_of = self.routing.owner           # shared view
+        dst.expected_end_markers = 0                # engine recounts below
+        #: migration strategy for rewrites on this edge; set when a
+        #: controller is attached (engine default: replicate-or-scatter).
+        self.strategy: Optional[MigrationStrategy] = None
+        self.routing.listener = self._on_rewrite
+        self.tuples_sent = 0
+        self.units_moved = 0.0
+
+    def send(self, chunk: Chunk) -> None:
+        keys, vals = chunk
+        if keys.size == 0:
+            return
+        dest = self.routing.route_chunk(keys)
+        self.tuples_sent += int(keys.size)
+        for w in range(self.dst.num_workers):
+            m = dest == w
+            if m.any():
+                self.dst.receive(w, keys[m], vals[m])
+
+    # ---- state-migration synchronization (paper §5, Fig. 10) ---------- #
+    def _on_rewrite(self, keys: List[int], old_rows: np.ndarray, new_rows: np.ndarray) -> None:
+        op = self.dst
+        strategy = self.strategy
+        if strategy is None:
+            # No controller: infer from mutability (Fig. 10 defaults).
+            strategy = (
+                MigrationStrategy.REPLICATE
+                if op.traits.mutability is StateMutability.IMMUTABLE
+                else MigrationStrategy.SCATTERED
+            )
+        if strategy in (MigrationStrategy.MARKERS, MigrationStrategy.PAUSE_RESUME):
+            # Fold stray fragments to owners before any whole-key move, so
+            # the moved scope is complete (the marker-synchronized point).
+            if hasattr(op, "merge_scattered"):
+                op.merge_scattered()
+        for i, k in enumerate(keys):
+            k = int(k)
+            owner = int(self.routing.owner[k])
+            receivers = np.nonzero(new_rows[i] > 0)[0]
+            if strategy is MigrationStrategy.REPLICATE:
+                # Copy the scope to every worker that now receives records
+                # of it and lacks the state (immutable: safe to share).
+                for w in receivers:
+                    w = int(w)
+                    if w != owner and k not in op.workers[w].state:
+                        self.units_moved += op.migrate_state(owner, w, [k], replicate=True)
+            elif strategy in (MigrationStrategy.MARKERS, MigrationStrategy.PAUSE_RESUME):
+                # Mutable + SBK: a one-hot rewrite moves the scope. The
+                # tick-atomic rewrite is the marker-aligned point.
+                if receivers.size == 1 and int(receivers[0]) != owner:
+                    dst_w = int(receivers[0])
+                    self.units_moved += op.migrate_state(owner, dst_w, [k], replicate=False)
+                    self.routing.owner[k] = dst_w
+            # SCATTERED: nothing at rewrite time; merged at END (§5.4).
+
+
+@dataclasses.dataclass
+class _Attached:
+    op: Operator
+    edge: Edge
+    controller: ReshapeController
+
+
+class EngineAdapter:
+    """Bridges one (edge, operator) pair to the ReshapeController protocol."""
+
+    def __init__(self, engine: "Engine", op: Operator, edge: Edge):
+        self.engine = engine
+        self.op = op
+        self.edge = edge
+        self.num_workers = op.num_workers
+        self.traits = op.traits
+        self.routing = edge.routing
+
+    def workloads(self) -> np.ndarray:
+        return self.op.workloads()
+
+    def arrivals_by_owner(self) -> np.ndarray:
+        arrived = self.op.arrived_by_key
+        out = np.zeros(self.num_workers, dtype=np.float64)
+        if arrived is not None:
+            np.add.at(out, self.routing.owner, arrived.astype(np.float64))
+            arrived[:] = 0
+        return out
+
+    def key_shares(self, worker: int) -> Dict[int, float]:
+        totals = self.op.key_arrivals_total
+        if totals is None:
+            return {}
+        grand = max(float(totals.sum()), 1.0)
+        owned = np.nonzero(self.routing.owner == worker)[0]
+        return {int(k): float(totals[k]) / grand for k in owned if totals[k] > 0}
+
+    def state_units(self, worker: int, mode: TransferMode) -> float:
+        return self.op.state_units(worker, mode)
+
+    def begin_migration(self, skewed: int, helpers: Sequence[int], mode: TransferMode) -> None:
+        strategy = choose_strategy(self.op.traits, mode)
+        if strategy is MigrationStrategy.REPLICATE:
+            # "the state of all keys are sent to the helper in the first
+            # phase" (§3.2): replicate S's whole partition state.
+            scopes = [int(k) for k in np.nonzero(self.routing.owner == skewed)[0]]
+            for h in helpers:
+                moved = self.op.migrate_state(skewed, int(h), scopes, replicate=True)
+                self.engine.state_units_moved += moved
+        # MARKERS moves at the routing rewrite; SCATTERED merges at END.
+
+    def tuples_left(self) -> float:
+        return self.engine.tuples_left_for(self.op)
+
+    def processing_rate(self) -> float:
+        return float(self.op.num_workers * self.op.service_rate)
+
+
+class Engine:
+    """A DAG of sources, operators and partitioned edges."""
+
+    def __init__(self):
+        self.sources: List[Source] = []
+        self.ops: List[Operator] = []                 # topological order
+        self.edges: List[Edge] = []
+        self.upstreams: Dict[str, List[object]] = {}  # op.name -> producers
+        self.controllers: List[_Attached] = []
+        self.sink: Optional[Sink] = None
+        self.tick = 0
+        self.state_units_moved = 0.0
+        self.ticks_to_finish: Optional[int] = None
+
+    # ---- graph construction ------------------------------------------- #
+    def add_source(self, src: Source) -> Source:
+        self.sources.append(src)
+        return src
+
+    def add_op(self, op: Operator) -> Operator:
+        self.ops.append(op)
+        self.upstreams.setdefault(op.name, [])
+        if isinstance(op, Sink):
+            self.sink = op
+        return op
+
+    def connect(self, producer, consumer: Operator, num_keys: int, *, init: str = "hash") -> Edge:
+        edge = Edge(consumer, num_keys, init=init)
+        producer.out_edge = edge
+        self.edges.append(edge)
+        self.upstreams.setdefault(consumer.name, []).append(producer)
+        return edge
+
+    def attach_controller(
+        self,
+        op: Operator,
+        cfg: Optional[ReshapeConfig] = None,
+        controller_cls=ReshapeController,
+        **kwargs,
+    ):
+        edge = self._in_edge(op)
+        adapter = EngineAdapter(self, op, edge)
+        controller = controller_cls(adapter, cfg, **kwargs)
+        edge.strategy = getattr(controller, "strategy", None)
+        self.controllers.append(_Attached(op, edge, controller))
+        return controller
+
+    def _in_edge(self, op: Operator) -> Edge:
+        for e in self.edges:
+            if e.dst is op:
+                return e
+        raise ValueError(f"no edge into {op.name}")
+
+    # ---- execution ------------------------------------------------------ #
+    def tuples_left_for(self, op: Operator) -> float:
+        """Future tuples this operator will still receive: everything not
+        yet emitted upstream plus everything queued upstream of it."""
+        left = 0.0
+        frontier = list(self.upstreams.get(op.name, []))
+        seen = set()
+        while frontier:
+            node = frontier.pop()
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            if isinstance(node, Source):
+                left += node.remaining
+            else:
+                left += sum(len(w.queue) for w in node.workers)
+                frontier.extend(self.upstreams.get(node.name, []))
+        return left
+
+    def run_tick(self) -> None:
+        t = self.tick
+        # 1. sources emit
+        for src in self.sources:
+            if not src.finished:
+                chunk = src.emit()
+                if chunk is not None and src.out_edge is not None:
+                    src.out_edge.send(chunk)
+        # 2. operators process (topo order; outputs visible downstream now)
+        for op in self.ops:
+            if op.finished:
+                continue
+            for chunk in op.tick():
+                if op.out_edge is not None:
+                    op.out_edge.send(chunk)
+        # 3. END propagation
+        for op in self.ops:
+            if op.finished:
+                continue
+            ups = self.upstreams.get(op.name, [])
+            if ups and all(self._producer_done(u) for u in ups) and op.queues_empty():
+                for chunk in op.on_end():
+                    if op.out_edge is not None:
+                        op.out_edge.send(chunk)
+        # 4. controllers
+        for att in self.controllers:
+            if not att.op.finished:
+                att.controller.step(t)
+        # 5. sink snapshot
+        if self.sink is not None:
+            self.sink.snapshot(t)
+        self.tick += 1
+
+    def _producer_done(self, node) -> bool:
+        return bool(node.finished)
+
+    def done(self) -> bool:
+        return all(s.finished for s in self.sources) and all(o.finished for o in self.ops)
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        while not self.done() and self.tick < max_ticks:
+            self.run_tick()
+        if self.done() and self.ticks_to_finish is None:
+            self.ticks_to_finish = self.tick
+        return self.tick

@@ -1,0 +1,426 @@
+"""Physical operators of the pipelined dataflow engine.
+
+Each operator runs ``num_workers`` parallel workers (the paper's workers);
+every worker owns an unprocessed-data queue (the phi metric source) and a
+keyed state whose mutability class drives the migration strategy (paper §5,
+Table 1):
+
+  HashJoin probe   immutable   key -> build rows         REPLICATE
+  HashJoin build   mutable     key -> build rows         MARKERS
+  GroupBy          mutable     key -> (count, sum)       MARKERS/SCATTERED
+  Sort (range)     mutable     range -> sorted buffer    MARKERS/SCATTERED
+  Filter/Project   stateless
+  Sink             terminal: accumulates the user-visible result series
+
+The engine moves chunks, not tuples (DESIGN.md §7-1); a worker processes at
+most ``service_rate`` tuples per tick.  Scattered state (mutable + SBR,
+§5.4) is kept per (worker, scope) and merged to the scope's owner at END
+markers before any blocked output is released.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.state_migration import OperatorTraits
+from ..core.types import StateMutability, TransferMode
+from .tuples import Chunk, WorkerQueue, concat, empty_chunk, first_col
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    processed_total: int = 0          # tuples consumed
+    emitted_total: int = 0            # tuples produced downstream
+
+
+class Worker:
+    """One parallel instance of an operator."""
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.queue = WorkerQueue()
+        self.stats = WorkerStats()
+        # Keyed state: scope -> val. Scope is an int key (hash ops) or a
+        # range id (range ops). `scattered` holds parts of scopes whose
+        # owner is another worker (§5.4).
+        self.state: Dict[int, object] = {}
+        self.scattered: Dict[int, object] = {}
+
+
+class Operator:
+    """Base class. Subclasses implement ``process`` and state hooks."""
+
+    #: traits consulted at workflow-compile time (§3.1 / Fig. 10)
+    traits = OperatorTraits("abstract", StateMutability.IMMUTABLE)
+
+    def __init__(self, name: str, num_workers: int, service_rate: int):
+        self.name = name
+        self.num_workers = num_workers
+        self.service_rate = int(service_rate)
+        self.workers = [Worker(w) for w in range(num_workers)]
+        self.out_edge = None            # set by the engine
+        self.finished = False           # all input consumed + END handled
+        self.ended_inputs = 0           # END markers received
+        self.expected_end_markers = 1   # one per upstream operator
+        # Per-key arrival counts since the last metric collection
+        # (owner-attributed by the adapter).
+        self.arrived_by_key: Optional[np.ndarray] = None
+        self.key_arrivals_total: Optional[np.ndarray] = None
+        # Shared view of the input edge's RoutingTable.owner array: the
+        # pre-mitigation primary of every scope. Mutable ops use it to
+        # classify arrivals as owned vs scattered (paper §5.4).
+        self.owner_of: Optional[np.ndarray] = None
+
+    def _owned(self, worker: Worker, key: int) -> bool:
+        return self.owner_of is None or int(self.owner_of[key]) == worker.wid
+
+    # -- data plane ----------------------------------------------------- #
+    def ensure_key_stats(self, num_keys: int) -> None:
+        if self.arrived_by_key is None:
+            self.arrived_by_key = np.zeros(num_keys, dtype=np.int64)
+            self.key_arrivals_total = np.zeros(num_keys, dtype=np.int64)
+
+    def receive(self, wid: int, keys: np.ndarray, vals: np.ndarray) -> None:
+        self.workers[wid].queue.push(keys, vals)
+        if self.arrived_by_key is not None and keys.size:
+            np.add.at(self.arrived_by_key, keys, 1)
+            np.add.at(self.key_arrivals_total, keys, 1)
+
+    def tick(self) -> List[Chunk]:
+        """Each worker consumes up to service_rate tuples; returns outputs."""
+        outs: List[Chunk] = []
+        for w in self.workers:
+            keys, vals = w.queue.pop(self.service_rate)
+            if keys.size == 0:
+                continue
+            w.stats.processed_total += int(keys.size)
+            out = self.process(w, keys, vals)
+            if out is not None and out[0].size:
+                w.stats.emitted_total += int(out[0].size)
+                outs.append(out)
+        return outs
+
+    def process(self, worker: Worker, keys: np.ndarray, vals: np.ndarray) -> Optional[Chunk]:
+        raise NotImplementedError
+
+    # -- END handling (blocking operators override) ---------------------- #
+    def on_end(self) -> List[Chunk]:
+        """Called when END markers arrived from every upstream worker set
+        and all queues are drained. Returns any final output chunks."""
+        self.finished = True
+        return []
+
+    def queues_empty(self) -> bool:
+        return all(len(w.queue) == 0 for w in self.workers)
+
+    # -- state migration hooks (paper §5) -------------------------------- #
+    def state_units(self, wid: int, mode: TransferMode) -> float:
+        """Size of the keyed state a mitigation would ship (abstract units)."""
+        return float(sum(self._scope_size(v) for v in self.workers[wid].state.values()))
+
+    @staticmethod
+    def _scope_size(val) -> int:
+        try:
+            return len(val)  # type: ignore[arg-type]
+        except TypeError:
+            return 1
+
+    def migrate_state(self, src: int, dst: int, scopes: Sequence[int], *, replicate: bool) -> float:
+        """Move (or copy) the given scopes' state src -> dst.
+
+        Returns the number of state units shipped. ``replicate=True`` keeps
+        the source copy (immutable state / SBR split-key sharing).
+        """
+        moved = 0.0
+        s, d = self.workers[src], self.workers[dst]
+        for scope in scopes:
+            if scope not in s.state:
+                continue
+            val = s.state[scope]
+            moved += self._scope_size(val)
+            d.state[scope] = self._copy_scope(val)
+            if not replicate:
+                del s.state[scope]
+        return moved
+
+    @staticmethod
+    def _copy_scope(val):
+        if isinstance(val, list):
+            return list(val)
+        if isinstance(val, np.ndarray):
+            return val.copy()
+        return val
+
+    # -- metrics ---------------------------------------------------------- #
+    def workloads(self) -> np.ndarray:
+        return np.array([len(w.queue) for w in self.workers], dtype=np.float64)
+
+    def received_totals(self) -> np.ndarray:
+        return np.array([w.queue.received_total for w in self.workers], dtype=np.float64)
+
+
+# ----------------------------------------------------------------------- #
+# Stateless operators                                                      #
+# ----------------------------------------------------------------------- #
+class Filter(Operator):
+    """Keeps tuples whose (key, val) passes a predicate."""
+
+    traits = OperatorTraits("filter", StateMutability.IMMUTABLE)
+
+    def __init__(self, name, num_workers, service_rate,
+                 predicate: Callable[[np.ndarray, np.ndarray], np.ndarray]):
+        super().__init__(name, num_workers, service_rate)
+        self.predicate = predicate
+
+    def process(self, worker, keys, vals):
+        mask = self.predicate(keys, vals)
+        return keys[mask], vals[mask]
+
+
+class Project(Operator):
+    """Applies (keys, vals) -> (keys', vals') elementwise."""
+
+    traits = OperatorTraits("project", StateMutability.IMMUTABLE)
+
+    def __init__(self, name, num_workers, service_rate,
+                 fn: Callable[[np.ndarray, np.ndarray], Chunk]):
+        super().__init__(name, num_workers, service_rate)
+        self.fn = fn
+
+    def process(self, worker, keys, vals):
+        return self.fn(keys, vals)
+
+
+# ----------------------------------------------------------------------- #
+# HashJoin                                                                 #
+# ----------------------------------------------------------------------- #
+class HashJoinProbe(Operator):
+    """Probe phase of HashJoin: immutable keyed state (paper Table 1).
+
+    The build side is installed up-front via :meth:`install_build` (the
+    paper's running example assumes the build phase finished, §3.1); each
+    probe tuple emits one output per matching build row.
+    """
+
+    traits = OperatorTraits(
+        "hashjoin_probe",
+        StateMutability.IMMUTABLE,
+        mergeable_state=True,
+        blocking=False,
+    )
+
+    def __init__(self, name, num_workers, service_rate, *, order_sensitive_downstream=False):
+        super().__init__(name, num_workers, service_rate)
+        self.traits = dataclasses.replace(
+            HashJoinProbe.traits, order_sensitive_downstream=order_sensitive_downstream
+        )
+
+    def install_build(self, routing, build_keys: np.ndarray, build_vals: np.ndarray) -> None:
+        """Partition the build table by the current routing owner."""
+        owner = routing.owner
+        for k, v in zip(build_keys, build_vals):
+            w = int(owner[int(k)])
+            self.workers[w].state.setdefault(int(k), []).append(float(v))
+
+    def process(self, worker, keys, vals):
+        matches = np.array(
+            [len(worker.state.get(int(k), worker.scattered.get(int(k), ())))
+             for k in keys],
+            dtype=np.int64,
+        )
+        # Emit one tuple per (probe tuple x build match); join payload is
+        # the probe val (enough for count/sum analytics downstream).
+        out_keys = np.repeat(keys, matches)
+        out_vals = np.repeat(vals, matches, axis=0)
+        return out_keys, out_vals
+
+
+class HashJoinBuild(Operator):
+    """Build phase: mutable keyed state (key -> build rows)."""
+
+    traits = OperatorTraits(
+        "hashjoin_build",
+        StateMutability.MUTABLE,
+        mergeable_state=True,
+        blocking=True,
+    )
+
+    def process(self, worker, keys, vals):
+        for k, v in zip(keys, vals):
+            k = int(k)
+            table = worker.state if self._owned(worker, k) else worker.scattered
+            table.setdefault(k, []).append(float(v))
+        return None
+
+    def merge_scattered(self) -> int:
+        moved = 0
+        for w in self.workers:
+            for k, rows in list(w.scattered.items()):
+                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
+                owner.state.setdefault(k, []).extend(rows)
+                moved += len(rows)
+            w.scattered.clear()
+        return moved
+
+    def on_end(self):
+        self.merge_scattered()
+        self.finished = True
+        return []
+
+
+# ----------------------------------------------------------------------- #
+# GroupBy (hash-based, blocking)                                           #
+# ----------------------------------------------------------------------- #
+class GroupByAgg(Operator):
+    """count/sum per key; mutable, mergeable, blocking (paper §5.4)."""
+
+    traits = OperatorTraits(
+        "groupby",
+        StateMutability.MUTABLE,
+        mergeable_state=True,
+        blocking=True,
+    )
+
+    def process(self, worker, keys, vals):
+        for k, v in zip(keys, first_col(vals)):
+            k = int(k)
+            table = worker.state if self._owned(worker, k) else worker.scattered
+            cnt, sm = table.get(k, (0, 0.0))
+            table[k] = (cnt + 1, sm + float(v))
+        return None
+
+    @staticmethod
+    def _scope_size(val) -> int:
+        return 1
+
+    def merge_scattered(self) -> int:
+        """Ship every scattered scope to its owner and fold it in (§5.4).
+
+        Returns the number of scattered scopes merged (state units moved).
+        """
+        moved = 0
+        for w in self.workers:
+            for k, (cnt, sm) in list(w.scattered.items()):
+                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
+                c0, s0 = owner.state.get(k, (0, 0.0))
+                owner.state[k] = (c0 + cnt, s0 + sm)
+                moved += 1
+            w.scattered.clear()
+        return moved
+
+    def on_end(self):
+        self.merge_scattered()
+        self.finished = True
+        outs = []
+        for w in self.workers:
+            if not w.state:
+                continue
+            ks = np.fromiter(w.state.keys(), dtype=np.int64)
+            cs = np.array([w.state[int(k)][1] for k in ks], dtype=np.float64)
+            w.stats.emitted_total += int(ks.size)
+            outs.append((ks, cs))
+        return outs
+
+
+# ----------------------------------------------------------------------- #
+# Sort (range-partitioned, blocking)                                       #
+# ----------------------------------------------------------------------- #
+class RangeSort(Operator):
+    """Range-partitioned sort on ``vals``; scope = range id = routing key.
+
+    Keys arriving here are *range ids* (the range partitioner upstream maps
+    sort-attribute -> range id); vals are the sort attribute.  State is one
+    growing buffer per range; SBR splits a range's records across workers
+    producing scattered buffers merged at END (paper Fig. 11).
+    """
+
+    traits = OperatorTraits(
+        "sort",
+        StateMutability.MUTABLE,
+        mergeable_state=True,
+        blocking=True,
+    )
+
+    def process(self, worker, keys, vals):
+        v1 = first_col(vals)
+        for k in np.unique(keys):
+            sel = v1[keys == k]
+            k = int(k)
+            table = worker.state if self._owned(worker, k) else worker.scattered
+            table.setdefault(k, []).append(sel)
+        return None
+
+    @staticmethod
+    def _scope_size(val) -> int:
+        return int(sum(a.size for a in val)) if isinstance(val, list) else 1
+
+    def merge_scattered(self) -> int:
+        moved = 0
+        for w in self.workers:
+            for k, parts in list(w.scattered.items()):
+                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
+                owner.state.setdefault(k, []).extend(parts)
+                moved += sum(p.size for p in parts)
+            w.scattered.clear()
+        return moved
+
+    def on_end(self):
+        self.merge_scattered()
+        self.finished = True
+        outs = []
+        for w in self.workers:
+            for k in sorted(w.state):
+                buf = np.sort(np.concatenate(w.state[k])) if w.state[k] else np.zeros(0)
+                w.stats.emitted_total += int(buf.size)
+                outs.append((np.full(buf.size, k, dtype=np.int64), buf))
+        return outs
+
+    def sorted_output(self) -> np.ndarray:
+        """Globally sorted values: ranges in order, each locally sorted."""
+        per_range: Dict[int, List[np.ndarray]] = {}
+        for w in self.workers:
+            for k, parts in w.state.items():
+                per_range.setdefault(k, []).extend(parts)
+        out = []
+        for k in sorted(per_range):
+            out.append(np.sort(np.concatenate(per_range[k])))
+        return np.concatenate(out) if out else np.zeros(0)
+
+
+# ----------------------------------------------------------------------- #
+# Sink: the user-visible result accumulator                                #
+# ----------------------------------------------------------------------- #
+class Sink(Operator):
+    """Terminal operator: accumulates per-key result counts over time.
+
+    ``series`` records (tick, counts.copy()) snapshots — the bar chart the
+    analyst watches (paper Figs. 3/6/16-19).
+    """
+
+    traits = OperatorTraits("sink", StateMutability.MUTABLE, mergeable_state=True,
+                            blocking=False)
+
+    def __init__(self, name, num_keys, *, snapshot_every: int = 1):
+        super().__init__(name, num_workers=1, service_rate=2**31 - 1)
+        self.counts = np.zeros(num_keys, dtype=np.int64)
+        self.sums = np.zeros(num_keys, dtype=np.float64)
+        self.series: List[Tuple[int, np.ndarray]] = []
+        self.snapshot_every = snapshot_every
+        self._tick = 0
+
+    def process(self, worker, keys, vals):
+        np.add.at(self.counts, keys, 1)
+        np.add.at(self.sums, keys, first_col(vals))
+        return None
+
+    def snapshot(self, tick: int) -> None:
+        self._tick = tick
+        if tick % self.snapshot_every == 0:
+            self.series.append((tick, self.counts.copy()))
+
+    def on_end(self):
+        self.finished = True
+        self.series.append((self._tick + 1, self.counts.copy()))
+        return []

@@ -1,0 +1,84 @@
+"""Columnar tuple chunks and per-worker queues for the pipelined engine.
+
+The engine moves data in *chunks* -- parallel (keys, vals) numpy arrays --
+instead of tuple-at-a-time (DESIGN.md §3 "assumptions changed").  A worker's
+unprocessed queue is a chunk deque with O(1) amortized pop of any prefix;
+its length in tuples is the paper's workload metric phi.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+Chunk = Tuple[np.ndarray, np.ndarray]  # (keys int64 [n], vals float64 [n] or [n, m])
+
+
+def empty_chunk() -> Chunk:
+    return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64)
+
+
+def first_col(vals: np.ndarray) -> np.ndarray:
+    """Scalar payload column of a 1-D or 2-D value array."""
+    return vals if vals.ndim == 1 else vals[:, 0]
+
+
+def concat(chunks) -> Chunk:
+    ks = [c[0] for c in chunks if c[0].size]
+    vs = [c[1] for c in chunks if c[1].size]
+    if not ks:
+        return empty_chunk()
+    return np.concatenate(ks), np.concatenate(vs)
+
+
+class WorkerQueue:
+    """Unprocessed-data queue of one worker (the phi metric source)."""
+
+    __slots__ = ("_chunks", "_size", "received_total")
+
+    def __init__(self) -> None:
+        self._chunks: Deque[Chunk] = collections.deque()
+        self._size = 0
+        self.received_total = 0  # sigma_w: lifetime tuples received
+
+    def __len__(self) -> int:
+        return self._size
+
+    def push(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        n = keys.shape[0]
+        if n == 0:
+            return
+        self._chunks.append((keys, vals))
+        self._size += n
+        self.received_total += n
+
+    def pop(self, n: int) -> Chunk:
+        """Remove and return up to n tuples from the head."""
+        if n <= 0 or self._size == 0:
+            return empty_chunk()
+        out = []
+        got = 0
+        while self._chunks and got < n:
+            keys, vals = self._chunks[0]
+            take = min(keys.shape[0], n - got)
+            if take == keys.shape[0]:
+                out.append(self._chunks.popleft())
+            else:
+                out.append((keys[:take], vals[:take]))
+                self._chunks[0] = (keys[take:], vals[take:])
+            got += take
+        self._size -= got
+        return concat(out)
+
+    def snapshot(self) -> Chunk:
+        """Copy of the queue contents (for checkpointing)."""
+        return concat(list(self._chunks))
+
+    def restore(self, chunk: Chunk, received_total: int) -> None:
+        self._chunks.clear()
+        self._size = 0
+        if chunk[0].size:
+            self._chunks.append((chunk[0].copy(), chunk[1].copy()))
+            self._size = int(chunk[0].size)
+        self.received_total = received_total

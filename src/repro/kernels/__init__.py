@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots (+ pure-jnp oracles).
+
+  flash_attention.py  causal flash attention, VMEM online-softmax tiles
+  rwkv_scan.py        RWKV6 recurrence, state resident in VMEM
+  partition.py        routing-table exchange: dest + histogram (phi)
+  segment_matmul.py   grouped per-expert matmul (MoE compute)
+  ops.py              jitted wrappers (interpret=True on CPU)
+  ref.py              pure-jnp oracles (the allclose targets)
+"""
+from . import ops, ref
+from .ops import flash_attention, partition, rwkv_scan, segment_matmul
+
+__all__ = ["ops", "ref", "flash_attention", "partition", "rwkv_scan",
+           "segment_matmul"]

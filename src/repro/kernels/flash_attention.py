@@ -1,0 +1,116 @@
+"""Pallas TPU flash attention (causal, MHA/GQA via pre-repeated heads).
+
+TPU adaptation of the paper-era GPU flash algorithms: the online-softmax
+accumulator lives in VMEM (not shared memory/registers); block shapes are
+MXU-aligned (q/k blocks multiples of 128 on the sequence dims, head_dim
+lanes); the KV loop is the pallas grid's minor dimension so the q tile and
+the accumulator stay resident in VMEM across KV steps (HBM->VMEM streaming
+of K/V only).
+
+Grid: (B*H, S/bq, T/bk)  — bk innermost; carries (acc, m, l) in VMEM
+scratch across the bk loop; the causal mask is computed from program ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                  # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        m_ref[...] = m_new
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    if causal:
+        # Skip KV blocks fully above the diagonal.
+        pl.when(k_start <= q_start + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,                  # [B, H, S, hd]
+    k: jnp.ndarray,                  # [B, H, T, hd]
+    v: jnp.ndarray,                  # [B, H, T, hd]
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, "pad seq to block multiples"
+    n_kv = T // bk
+
+    qf = q.reshape(B * H, S, hd)
+    kf = k.reshape(B * H, T, hd)
+    vf = v.reshape(B * H, T, hd)
+
+    grid = (B * H, S // bq, n_kv)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        n_kv_blocks=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),    # acc
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd)

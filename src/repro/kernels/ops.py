@@ -1,0 +1,53 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the validation mode of this
+container) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import partition as _part
+from . import rwkv_scan as _rwkv
+from . import segment_matmul as _segmm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q/k/v: [B, H, S|T, hd] (repeat KV heads for GQA before the call)."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=_default_interpret())
+
+
+@jax.jit
+def rwkv_scan(r, k, v, w, u, state0=None):
+    """RWKV6 recurrence: [B,H,T,hd] -> (out, final state)."""
+    return _rwkv.rwkv_scan(r, k, v, w, u, state0,
+                           interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def partition(keys, counters, weights, *, block_n: int = 1024):
+    """Routing-table partition: (dest [N], histogram [W])."""
+    return _part.partition(keys, counters, weights, block_n=block_n,
+                           interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def segment_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128):
+    """Grouped expert matmul: [E,C,D] @ [E,D,F] -> [E,C,F]."""
+    return _segmm.segment_matmul(x, w, block_m=block_m, block_n=block_n,
+                                 block_k=block_k,
+                                 interpret=_default_interpret())

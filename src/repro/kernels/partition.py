@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the routing-table partition (dataflow exchange).
+
+The paper's data plane hot spot: given a chunk of record keys, the current
+row-stochastic routing table (the partition function Reshape rewrites) and
+per-key running counters, compute each record's destination worker and the
+per-worker histogram (the workload metric phi feeding skew detection).
+
+TPU adaptation of a hash-exchange: instead of per-tuple pointer chasing,
+destinations come from an inverse-CDF lookup (records x workers compare —
+VPU-friendly) and the histogram from a one-hot column sum (MXU-friendly).
+Grid tiles the record stream; the routing table tile stays resident in
+VMEM; the histogram accumulates in VMEM scratch across the grid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_GOLDEN = 0.6180339887498949
+
+
+def _partition_kernel(keys_ref, counters_ref, cdf_ref, dest_ref, hist_ref,
+                      hist_acc, *, bn: int, n_workers: int, n_blocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_acc[...] = jnp.zeros_like(hist_acc)
+
+    keys = keys_ref[...]                                 # [bn]
+    counters = counters_ref[...].astype(jnp.float32)
+    u = jnp.mod((counters + 1.0) * _GOLDEN, 1.0)         # [bn]
+    rows = cdf_ref[keys]                                 # [bn, W] gather
+    dest = jnp.sum(u[:, None] >= rows, axis=1).astype(jnp.int32)
+    dest = jnp.minimum(dest, n_workers - 1)
+    dest_ref[...] = dest
+    onehot = (dest[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 1))
+    hist_acc[...] += onehot.astype(jnp.int32).sum(axis=0, keepdims=True)
+
+    @pl.when(i == n_blocks - 1)
+    def _finish():
+        hist_ref[...] = hist_acc[...]
+
+
+def partition(
+    keys: jnp.ndarray,              # [N] int32
+    counters: jnp.ndarray,          # [N] int32 per-key running index
+    weights: jnp.ndarray,           # [K, W] row-stochastic routing table
+    *,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (dest [N] int32, histogram [W] int32)."""
+    N = keys.shape[0]
+    K, W = weights.shape
+    bn = min(block_n, N)
+    assert N % bn == 0, "pad the chunk to a block multiple"
+    n_blocks = N // bn
+    cdf = jnp.cumsum(weights.astype(jnp.float32), axis=1)
+
+    kernel = functools.partial(_partition_kernel, bn=bn, n_workers=W,
+                               n_blocks=n_blocks)
+    dest, hist = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((K, W), lambda i: (0, 0)),      # resident table
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((1, W), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.int32)],
+        interpret=interpret,
+    )(keys, counters, cdf)
+    return dest, hist[0]

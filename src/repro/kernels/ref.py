@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = 0.6180339887498949
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Naive softmax attention. q [B,H,S,hd]; k/v [B,H,T,hd]."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              w: jnp.ndarray, u: jnp.ndarray,
+              state0: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 recurrence. r/k/v/w: [B,H,T,hd]; u: [H,hd].
+
+    state_t = diag(w_t) state_{t-1} + k_t v_t^T
+    out_t   = r_t (state_{t-1} + diag(u) k_t v_t^T)
+    Returns (out [B,H,T,hd], final state [B,H,hd,hd]).
+    """
+    B, H, T, hd = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]     # [B,H,hd,hd]
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + uf[..., None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (rf, kf, vf, wf))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), s_fin
+
+
+def partition(keys: jnp.ndarray, counters: jnp.ndarray,
+              weights: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Routing-table partition (the dataflow exchange hot spot).
+
+    keys [N] int32; counters [N] per-key running index; weights [K, W]
+    row-stochastic. Returns (dest [N] int32, histogram [W] int32) via the
+    low-discrepancy inverse-CDF rule of repro.core.ops.route_records.
+    """
+    u = jnp.mod((counters.astype(jnp.float32) + 1.0) * _GOLDEN, 1.0)
+    cdf = jnp.cumsum(weights[keys], axis=1)
+    dest = jnp.sum(u[:, None] >= cdf, axis=1).astype(jnp.int32)
+    W = weights.shape[1]
+    dest = jnp.minimum(dest, W - 1)
+    hist = jnp.sum(jax.nn.one_hot(dest, W, dtype=jnp.int32), axis=0)
+    return dest, hist
+
+
+def segment_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped expert matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,8 @@
+"""Launchers: production meshes, the multi-pod dry-run, train/serve CLIs.
+
+NOTE: ``dryrun`` must be imported/run as a fresh process (it sets
+XLA_FLAGS before importing jax); do not import it from library code.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

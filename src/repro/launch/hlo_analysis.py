@@ -1,0 +1,273 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` does NOT multiply while-loop bodies by
+their trip counts, so any scanned model (layers, flash KV blocks, remat)
+under-reports FLOPs/bytes/collectives by orders of magnitude. This module
+re-derives the totals by walking the call graph with multipliers taken
+from each while op's ``backend_config.known_trip_count`` (emitted by XLA
+for counted loops, i.e. every ``lax.scan``).
+
+Per-device accounting (the module is the per-device SPMD program):
+  flops        2 * prod(dot output dims) * prod(contracting dims), plus
+               1 flop/element for major elementwise/reduce ops (minor).
+  hbm_bytes    sum of result sizes of non-trivial ops (fusion outputs,
+               dots, copies, dynamic-(update-)slices, collectives) plus
+               operand sizes for dots/collectives — an HBM-traffic
+               approximation documented in EXPERIMENTS.md.
+  collectives  result bytes per collective kind, trip-multiplied.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose results we count as HBM traffic (fusion results subsume their
+# internals; parameters/GTEs/bitcasts are aliases, not traffic)
+_TRAFFIC_OPS = (
+    "fusion", "dot", "copy", "convolution", "dynamic-slice",
+    "dynamic-update-slice", "broadcast", "transpose", "reduce", "scatter",
+    "gather", "concatenate", "pad", "select-and-scatter", "slice", "reverse",
+) + _COLLECTIVES
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elements_of(text: str) -> int:
+    total = 0
+    for _, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+class Instruction:
+    __slots__ = ("name", "result_text", "op", "line", "called", "operands")
+
+    def __init__(self, name, result_text, op, line, called, operands):
+        self.name = name
+        self.result_text = result_text
+        self.op = op
+        self.line = line
+        self.called = called
+        self.operands = operands
+
+
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instruction]] = {}
+        self.entry: Optional[str] = None
+        self.param_shapes: Dict[str, Dict[str, str]] = {}
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY ") or (line.startswith("%") and "(" in line
+                                             and line.rstrip().endswith("{")):
+                is_entry = line.startswith("ENTRY")
+                header = line[len("ENTRY "):] if is_entry else line
+                name = header.split(" ", 1)[0].lstrip("%")
+                cur = name
+                self.computations[cur] = []
+                if is_entry:
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _INST_RE.match(line)
+            if not m:
+                continue
+            name, result_text, op, rest = m.groups()
+            called = _CALLED_RE.findall(line)
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                called += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+            # operand names: the %refs inside the argument parens (cut at
+            # the closing paren to skip attribute refs like calls=%...)
+            argtext = rest.split(")", 1)[0]
+            operands = _OPERAND_RE.findall(argtext)
+            self.computations[cur].append(
+                Instruction(name, result_text, op, line, called, operands))
+
+    # ------------------------------------------------------------------ #
+    def _fusion_bodies(self) -> set:
+        bodies = set()
+        for insts in self.computations.values():
+            for inst in insts:
+                if inst.op == "fusion":
+                    bodies.update(inst.called)
+        return bodies
+
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.result_text for i in self.computations.get(comp, [])}
+
+    def _operand_bytes(self, comp: str, names: List[str]) -> float:
+        tab = self._symtab(comp)
+        return float(sum(_bytes_of(tab.get(n, "")) for n in names))
+
+    def _fusion_root(self, body: str) -> Optional[Instruction]:
+        insts = self.computations.get(body, [])
+        for inst in insts:
+            if "ROOT" in inst.line:
+                return inst
+        return insts[-1] if insts else None
+
+    def _traffic(self, comp: str, inst: Instruction) -> float:
+        """HBM-traffic estimate for one top-level instruction, following
+        XLA cost-analysis semantics at fusion boundaries: operand reads +
+        result writes; in-place dynamic-update-slice counts the update
+        slice (read+write), not the aliased full buffer."""
+        op = inst.op
+        res = _bytes_of(inst.result_text)
+        if op == "dynamic-update-slice":
+            upd = (self._operand_bytes(comp, inst.operands[1:2])
+                   if len(inst.operands) > 1 else res)
+            return 2.0 * upd
+        if op == "fusion":
+            root = self._fusion_root(inst.called[0]) if inst.called else None
+            if root is not None and root.op == "dynamic-update-slice":
+                upd = (self._operand_bytes(inst.called[0],
+                                           root.operands[1:2])
+                       if len(root.operands) > 1 else 0.0)
+                other = self._operand_bytes(comp, inst.operands) - \
+                    _bytes_of(inst.result_text)   # minus the aliased buffer
+                return 2.0 * upd + max(other, 0.0)
+            return res + self._operand_bytes(comp, inst.operands)
+        if op == "dynamic-slice":
+            return 2.0 * res
+        if op in _COLLECTIVES:
+            return res
+        if op == "broadcast":
+            return res
+        return res + self._operand_bytes(comp, inst.operands)
+
+    def analyze(self) -> Dict[str, object]:
+        flops = 0.0
+        hbm = 0.0
+        coll_bytes = {c: 0.0 for c in _COLLECTIVES}
+        coll_counts = {c: 0.0 for c in _COLLECTIVES}
+        fusion_bodies = self._fusion_bodies()
+        seen_stack: List[str] = []
+
+        def visit(comp: str, mult: float) -> None:
+            if comp not in self.computations or comp in seen_stack:
+                return
+            seen_stack.append(comp)
+            nonlocal flops, hbm
+            count_traffic = comp not in fusion_bodies
+            for inst in self.computations[comp]:
+                op = inst.op
+                if op == "while":
+                    t = _TRIP_RE.search(inst.line)
+                    trip = int(t.group(1)) if t else 1
+                    bm = re.search(r"body=%?([\w\.\-]+)", inst.line)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", inst.line)
+                    if bm:
+                        visit(bm.group(1), mult * trip)
+                    if cm:
+                        visit(cm.group(1), mult * trip)
+                    continue
+                if op == "dot":
+                    flops += mult * self._dot_flops(comp, inst)
+                elif op in ("fusion", "reduce"):
+                    flops += mult * _elements_of(inst.result_text)
+                if op in _COLLECTIVES and count_traffic:
+                    b = _bytes_of(inst.result_text)
+                    coll_bytes[op] += mult * b
+                    coll_counts[op] += mult
+                if count_traffic and (op in _TRAFFIC_OPS or op == "dot"):
+                    hbm += mult * self._traffic(comp, inst)
+                for callee in inst.called:
+                    if op != "while":      # while handled above with trip
+                        visit(callee, mult)
+            seen_stack.pop()
+
+        if self.entry:
+            visit(self.entry, 1.0)
+        return {
+            "flops": flops,
+            "hbm_bytes": hbm,
+            "collective_bytes": {k: v for k, v in coll_bytes.items()},
+            "collective_counts": {k: v for k, v in coll_counts.items()},
+            "collective_total_bytes": sum(coll_bytes.values()),
+        }
+
+    # ------------------------------------------------------------------ #
+    def _dot_flops(self, comp: str, inst: Instruction) -> float:
+        """2 * prod(out dims) * prod(lhs contracting dims)."""
+        out_elems = 1
+        shapes = _shapes_in(inst.result_text)
+        if shapes:
+            for d in shapes[0][1]:
+                out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+        om = re.search(r"dot\(%?([\w\.\-]+)", inst.line)
+        contract = 1
+        if m and om:
+            lhs_shape = self._operand_shape(comp, om.group(1))
+            if lhs_shape:
+                dims = [int(i) for i in m.group(1).split(",") if i]
+                for i in dims:
+                    if i < len(lhs_shape):
+                        contract *= lhs_shape[i]
+        return 2.0 * out_elems * contract
+
+    def _operand_shape(self, comp: str, operand: str) -> Optional[List[int]]:
+        for inst in self.computations.get(comp, []):
+            if inst.name == operand:
+                shapes = _shapes_in(inst.result_text)
+                return shapes[0][1] if shapes else None
+        return None
+
+
+def analyze_text(text: str) -> Dict[str, object]:
+    return HloModule(text).analyze()
+
+
+def analyze_file(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        return analyze_text(f.read())
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze_file(sys.argv[1]), indent=1))

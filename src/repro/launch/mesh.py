@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod = 256 chips as (data=16, model=16); multi-pod = 2 pods = 512
+chips as (pod=2, data=16, model=16). Functions, not module constants, so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (CPU smoke / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link (~3 links usable/chip)

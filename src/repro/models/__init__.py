@@ -1,0 +1,32 @@
+"""Model zoo: composable JAX modules for the 10 assigned architectures.
+
+  layers.py     norms, rope, FFNs, loss, scan-stacking helpers
+  attention.py  GQA / sliding-window / MLA, chunked-flash reference,
+                functional KV caches
+  moe.py        capacity-bounded top-k MoE (gather dispatch) + router
+  ssm.py        RWKV6 time/channel-mix, Mamba-style selective SSM
+  model.py      unified init/forward/prefill/decode over all families
+"""
+from . import attention, layers, moe, model, ssm
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "attention",
+    "layers",
+    "moe",
+    "model",
+    "ssm",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

@@ -1,0 +1,330 @@
+"""Attention variants: GQA (llama-family), sliding-window, and MLA.
+
+All prefill/train paths use a *chunked online-softmax* ("reference flash")
+implemented with ``jax.lax.scan`` over KV blocks, so the [S, T] score
+matrix is never materialized — this is what makes the 32k-prefill cells
+compile within per-chip HBM, and it is the computation the Pallas
+``flash_attention`` kernel replaces on TPU (see ``repro/kernels``).
+
+Shapes: x [B, S, D]; heads shard over the ``model`` mesh axis when the
+head count divides it (see repro/dist/sharding.py), batch over ``data``.
+
+KV caches are functional dicts updated with ``dynamic_update_slice``;
+MLA caches the *compressed* latent (c_kv, k_pe) — the paper-exact memory
+saving — and uses the weight-absorbed form at decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, dense_init
+
+NEG_INF = -2.0 ** 30
+
+
+def _maybe_seq_shard(x: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-parallel constraint on [B, S, H, hd]: S -> "model".
+
+    Applied only when a mesh context with a "model" axis is active (dry-run
+    / production lowering); a no-op in meshless CPU smoke tests.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or "model" not in (am.axis_names or ()):
+            return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(None, "model", None, None))
+    except Exception:
+        return x
+
+
+# --------------------------------------------------------------------- #
+# Chunked online-softmax attention core                                  #
+# --------------------------------------------------------------------- #
+def flash_attention_ref(
+    q: jnp.ndarray,            # [B, S, H, hd]
+    k: jnp.ndarray,            # [B, T, KV, hd]
+    v: jnp.ndarray,            # [B, T, KV, hd]
+    *,
+    q_offset: int | jnp.ndarray = 0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block: int = 1024,
+    scale: Optional[float] = None,
+    seq_shard: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks (GQA via head repetition).
+
+    q_offset is the absolute position of q[0] (for decode: cache length).
+    ``window``: sliding-window size (None = full causal).
+    ``seq_shard``: shard the query dim over "model" (sequence parallelism
+    for archs whose head count does not divide the model axis).
+    """
+    B, S, H, hd = q.shape
+    T, KV, dv = k.shape[1], k.shape[2], v.shape[-1]
+    rep = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    q = (q * scale).astype(jnp.float32)
+    if seq_shard:
+        q = _maybe_seq_shard(q)
+
+    nblk = -(-T // block)
+    pad = nblk * block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, KV, hd).astype(jnp.float32)
+    vb = v.reshape(B, nblk, block, KV, dv).astype(jnp.float32)
+
+    q_pos = jnp.arange(S) + q_offset                       # [S]
+
+    def body(carry, blk):
+        acc, m, l = carry                                   # acc [B,S,H,hd]
+        kblk, vblk, start = blk                             # [B,block,KV,hd]
+        if rep > 1:
+            kblk = jnp.repeat(kblk, rep, axis=2)
+            vblk = jnp.repeat(vblk, rep, axis=2)
+        s = jnp.einsum("bshd,bthd->bhst", q, kblk)          # [B,H,S,block]
+        kv_pos = start + jnp.arange(block)                  # [block]
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else jnp.ones(
+            (S, block), dtype=bool)
+        mask = mask & (kv_pos[None, :] < T)                 # padding
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))              # [B,H,S]
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhst,bthd->bhsd", p, vblk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, S, dv), jnp.float32)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    starts = jnp.arange(nblk) * block
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), starts),
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]            # [B,H,S,hd]
+    return jnp.transpose(out, (0, 2, 1, 3))                 # [B,S,H,hd]
+
+
+# --------------------------------------------------------------------- #
+# GQA attention layer                                                    #
+# --------------------------------------------------------------------- #
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype,
+                         scale=(n_heads * head_dim) ** -0.5),
+    }
+
+
+def gqa_apply(
+    p: Params,
+    x: jnp.ndarray,                       # [B, S, D]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10_000.0,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block: int = 1024,
+    seq_shard: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (out [B,S,D], updated cache). With a cache, S is the new
+    segment (1 for decode) appended at ``cache_len``."""
+    B, S, D = x.shape
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, n_kv, head_dim)
+
+    offset = 0 if cache is None else cache_len
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            0 if cache is None else cache_len)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S > 1:
+            # Prefill: the segment attends within itself (cache starts at
+            # cache_len == 0 for prompt ingestion) — flash path, no [S,T]
+            # materialization against the full cache buffer.
+            out = flash_attention_ref(q, k, v, q_offset=offset, causal=causal,
+                                      window=window, block=block,
+                                      seq_shard=seq_shard)
+        else:
+            out = decode_attention(q, ck, cv, cache_len + S, window=window)
+    else:
+        out = flash_attention_ref(q, k, v, q_offset=offset, causal=causal,
+                                  window=window, block=block,
+                                  seq_shard=seq_shard)
+    out = out.reshape(B, S, n_heads * head_dim).astype(dt)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window=None):
+    """Single-segment attention over a (padded) cache buffer.
+
+    q [B,S,H,hd] (S small), caches [B,Tmax,KV,hd]; positions >= valid_len
+    are masked. Memory O(S*Tmax) — fine for S=1 decode.
+    """
+    B, S, H, hd = q.shape
+    KV = k_cache.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    s = jnp.einsum("bshd,bthd->bhst", (q * hd ** -0.5).astype(jnp.float32),
+                   k.astype(jnp.float32))
+    t_pos = jnp.arange(k.shape[1])
+    q_pos = valid_len - S + jnp.arange(S)
+    mask = t_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask = mask & (t_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bhsd", p, v.astype(jnp.float32))
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def gqa_cache_init(batch: int, max_len: int, n_kv: int, head_dim: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# MLA: multi-head latent attention (DeepSeek-V2 / MiniCPM3)              #
+# --------------------------------------------------------------------- #
+def mla_init(key, d_model: int, n_heads: int, *, kv_lora: int,
+             qk_nope: int, qk_rope: int, v_head: int,
+             q_lora: Optional[int] = None, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    q_dim = n_heads * (qk_nope + qk_rope)
+    p: Params = {
+        "w_dkv": dense_init(ks[0], d_model, kv_lora, dtype),
+        "w_kpe": dense_init(ks[1], d_model, qk_rope, dtype),
+        "w_uk": (jax.random.truncated_normal(ks[2], -3, 3,
+                 (kv_lora, n_heads, qk_nope)) * kv_lora ** -0.5).astype(dtype),
+        "w_uv": (jax.random.truncated_normal(ks[3], -3, 3,
+                 (kv_lora, n_heads, v_head)) * kv_lora ** -0.5).astype(dtype),
+        "wo": dense_init(ks[4], n_heads * v_head, d_model, dtype,
+                         scale=(n_heads * v_head) ** -0.5),
+    }
+    if q_lora is None:
+        p["wq"] = dense_init(ks[5], d_model, q_dim, dtype)
+    else:
+        p["w_dq"] = dense_init(ks[5], d_model, q_lora, dtype)
+        p["w_uq"] = dense_init(ks[6], q_lora, q_dim, dtype)
+    return p
+
+
+def mla_apply(
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    kv_lora: int,
+    qk_nope: int,
+    qk_rope: int,
+    v_head: int,
+    rope_theta: float = 10_000.0,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    block: int = 1024,
+    seq_shard: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """MLA forward. Cache holds the COMPRESSED (c_kv, k_pe) only.
+
+    Prefill/train: expand k_nope/v from the latent and run chunked flash.
+    Decode: weight-absorbed path — queries are mapped into the latent
+    space and scores are taken against the compressed cache directly.
+    """
+    B, S, D = x.shape
+    dt = x.dtype
+    if "wq" in p:
+        q = x @ p["wq"].astype(dt)
+    else:
+        q = (x @ p["w_dq"].astype(dt)) @ p["w_uq"].astype(dt)
+    q = q.reshape(B, S, n_heads, qk_nope + qk_rope)
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+
+    c_kv = x @ p["w_dkv"].astype(dt)                         # [B,S,r]
+    k_pe = (x @ p["w_kpe"].astype(dt)).reshape(B, S, 1, qk_rope)
+
+    offset = 0 if cache is None else cache_len
+    positions = jnp.arange(S)[None, :] + offset
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+    k_pe = apply_rope(k_pe, positions, rope_theta)[:, :, 0]  # [B,S,rope]
+
+    scale = (qk_nope + qk_rope) ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        c_up = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_len, 0))
+        pe_up = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, cache_len, 0))
+        new_cache = {"c_kv": c_up, "k_pe": pe_up}
+
+    if cache is None or S > 1:
+        # Expanded path (train + prefill): materialize per-head K/V from
+        # the latent for the current segment only; chunked flash.
+        k_nope = jnp.einsum("btr,rhd->bthd", c_kv, p["w_uk"].astype(dt))
+        v = jnp.einsum("btr,rhd->bthd", c_kv, p["w_uv"].astype(dt))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, S, n_heads, qk_rope))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = flash_attention_ref(q_full, k_full, v, q_offset=0, causal=True,
+                                  block=block, scale=scale,
+                                  seq_shard=seq_shard)        # [B,S,H,v_head]
+    else:
+        # Absorbed path: q_lat = q_nope @ W_uk  -> score vs c_kv directly.
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, p["w_uk"].astype(dt))
+        s = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       c_up.astype(jnp.float32))
+        s += jnp.einsum("bshd,btd->bhst", q_pe.astype(jnp.float32),
+                        pe_up.astype(jnp.float32))
+        s *= scale
+        t_pos = jnp.arange(c_up.shape[1])
+        q_pos = cache_len + jnp.arange(S)                     # absolute pos
+        mask = t_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, c_up.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, p["w_uv"].astype(jnp.float32))
+
+    out = out.reshape(B, S, n_heads * v_head).astype(dt)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def mla_cache_init(batch: int, max_len: int, kv_lora: int, qk_rope: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, kv_lora), dtype),
+        "k_pe": jnp.zeros((batch, max_len, qk_rope), dtype),
+    }

@@ -1,0 +1,154 @@
+"""Core neural layers, pure-functional JAX (params = nested dicts).
+
+Conventions:
+  * parameters are stored in ``param_dtype`` (fp32 by default) and cast to
+    ``compute_dtype`` (bf16) inside the forward pass (mixed precision);
+  * every ``init_*`` returns a params pytree; every ``apply``-style function
+    is pure and shape-polymorphic over batch/sequence;
+  * layer stacks are *scanned*: per-layer params are stacked on a leading
+    axis and consumed by ``jax.lax.scan`` (compile time independent of
+    depth, essential for the 40-cell dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (llama-style)."""
+    std = scale if scale is not None else d_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype=dtype), "b": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(x: jnp.ndarray, p: Params, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * p["g"].astype(dt) + p["b"].astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embeddings                                             #
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                           # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Feed-forward blocks                                                    #
+# --------------------------------------------------------------------- #
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def swiglu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["w_in"].astype(dt) + p["b_in"].astype(dt))
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# Losses                                                                 #
+# --------------------------------------------------------------------- #
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None):
+    """Mean token cross-entropy; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def stack_layer_params(layer_params: list) -> Params:
+    """Stack per-layer pytrees on a leading axis for lax.scan."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params)
+
+
+def maybe_shard(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """with_sharding_constraint(P(*axes)) iff a mesh context providing all
+    named axes is active; a no-op in meshless CPU tests."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names = set(am.axis_names or ())
+        if not names:
+            return x
+        for ax in axes:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if isinstance(a, str) and a not in names:
+                    return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+    except Exception:
+        return x
+
+
+UNC = None  # set below: PartitionSpec.UNCONSTRAINED (partial constraints)
+try:
+    from jax.sharding import PartitionSpec as _P
+    UNC = _P.UNCONSTRAINED
+except Exception:  # pragma: no cover
+    pass

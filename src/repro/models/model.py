@@ -1,0 +1,453 @@
+"""Unified model builder for the 10 assigned architectures.
+
+One functional API over every family:
+
+    params = init_params(cfg, key)
+    logits = forward(params, cfg, batch)                  # train / prefill
+    cache  = init_cache(cfg, batch_size, max_len)
+    logits, cache = decode_step(params, cfg, tokens, cache, cache_len)
+    loss, aux = loss_fn(params, cfg, batch)
+
+Layer stacks are consumed with ``jax.lax.scan`` over stacked per-layer
+params (compile time independent of depth — required for the 40-cell
+dry-run); per-layer KV caches ride along as scan xs/ys. Heterogeneous
+prefixes (DeepSeek's first-k-dense layers) are unrolled separately.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, dtype_of
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (
+    Params,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    stack_layer_params,
+    swiglu,
+    swiglu_init,
+)
+
+
+# ===================================================================== #
+# Parameter initialization                                               #
+# ===================================================================== #
+def _norm_init(cfg: ModelConfig, d: int, dt):
+    return rmsnorm_init(d, dt) if cfg.norm == "rms" else layernorm_init(d, dt)
+
+
+def _apply_norm(cfg: ModelConfig, x, p):
+    return rmsnorm(x, p) if cfg.norm == "rms" else layernorm(x, p)
+
+
+def _block_init(cfg: ModelConfig, key, *, dense_ffn: bool = False,
+                cross: bool = False, causal_attn: bool = True) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": _norm_init(cfg, cfg.d_model, dt)}
+
+    if cfg.family == "ssm":
+        p["tmix"] = ssm_lib.rwkv6_init(ks[0], cfg.d_model, cfg.n_heads, dt)
+        p["ln2"] = _norm_init(cfg, cfg.d_model, dt)
+        p["cmix"] = ssm_lib.rwkv6_cmix_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    if cfg.attn == "mla":
+        p["attn"] = attn_lib.mla_init(
+            ks[0], cfg.d_model, cfg.n_heads, kv_lora=cfg.kv_lora,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head,
+            q_lora=cfg.q_lora, dtype=dt)
+    else:
+        p["attn"] = attn_lib.gqa_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dt)
+
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(ks[1])
+        p["ssm_in"] = dense_init(k1, cfg.d_model, cfg.d_model, dt)
+        p["ssm"] = ssm_lib.mamba_init(k2, cfg.d_model, cfg.ssm_state, dt)
+        p["ln_attn_out"] = rmsnorm_init(cfg.d_model, dt)
+        p["ln_ssm_out"] = rmsnorm_init(cfg.d_model, dt)
+
+    if cross:
+        p["ln_cross"] = _norm_init(cfg, cfg.d_model, dt)
+        p["cross"] = attn_lib.gqa_init(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.hd, dt)
+
+    p["ln2"] = _norm_init(cfg, cfg.d_model, dt)
+    if cfg.n_experts and not dense_ffn:
+        p["moe"] = moe_lib.moe_init(
+            ks[3], cfg.d_model, cfg.d_expert, cfg.n_experts,
+            n_shared=cfg.n_shared, d_shared=cfg.d_shared or None,
+            n_replica_slots=cfg.moe_replica_slots, dtype=dt)
+    else:
+        if cfg.act == "swiglu":
+            p["mlp"] = swiglu_init(ks[3], cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["mlp"] = gelu_mlp_init(ks[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 8)
+    p: Params = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dt)}
+
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    p["blocks"] = stack_layer_params([
+        _block_init(cfg, keys[1 + i], cross=cfg.family == "encdec")
+        for i in range(n_scan)
+    ])
+    if cfg.first_k_dense:
+        p["dense_blocks"] = [
+            _block_init(cfg, keys[1 + n_scan + i], dense_ffn=True)
+            for i in range(cfg.first_k_dense)
+        ]
+    if cfg.family == "encdec":
+        enc_cfg = cfg
+        p["enc_blocks"] = stack_layer_params([
+            _block_init(enc_cfg, keys[1 + cfg.n_layers + i])
+            for i in range(cfg.n_enc_layers)
+        ])
+        p["enc_pos"] = (jax.random.normal(keys[-3], (cfg.enc_seq, cfg.d_model))
+                        * 0.01).astype(dt)
+        p["ln_enc"] = _norm_init(cfg, cfg.d_model, dt)
+    p["ln_f"] = _norm_init(cfg, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab, dt,
+                                  scale=cfg.d_model ** -0.5)
+    return p
+
+
+# ===================================================================== #
+# Block forward                                                          #
+# ===================================================================== #
+def _hybrid_window(cfg: ModelConfig, flag_full):
+    """Effective attention window per layer: full-attn layers see the whole
+    sequence, the rest a sliding window (traced select keeps scan uniform)."""
+    big = jnp.asarray(2 ** 30, jnp.int32)
+    return jnp.where(flag_full, big, jnp.asarray(cfg.swa_window, jnp.int32))
+
+
+def _block_apply(
+    cfg: ModelConfig,
+    bp: Params,
+    x: jnp.ndarray,
+    *,
+    cache: Optional[Params] = None,
+    cache_len=None,
+    enc_out: Optional[jnp.ndarray] = None,
+    window=None,
+    causal: bool = True,
+    dense_ffn: bool = False,
+    moe_routing: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
+    """One decoder block. Returns (x, new_cache, moe_stats)."""
+    stats: Dict[str, jnp.ndarray] = {}
+    h = _apply_norm(cfg, x, bp["ln1"])
+
+    if cfg.family == "ssm":
+        mix_state = None if cache is None else {
+            "wkv": cache["wkv"], "shift": cache["shift"]}
+        out, new_mix = ssm_lib.rwkv6_apply(bp["tmix"], h, n_heads=cfg.n_heads,
+                                           state=mix_state)
+        x = x + out
+        h2 = _apply_norm(cfg, x, bp["ln2"])
+        clast = None if cache is None else cache["cshift"]
+        out2, new_clast = ssm_lib.rwkv6_cmix_apply(bp["cmix"], h2, clast)
+        x = x + out2
+        new_cache = None
+        if cache is not None:
+            new_cache = {"wkv": new_mix["wkv"], "shift": new_mix["shift"],
+                         "cshift": new_clast}
+        return x, new_cache, stats
+
+    # --- attention (+ parallel SSM head for hybrid) ---
+    attn_cache = None if cache is None else cache.get("attn")
+    if cfg.attn == "mla":
+        a_out, new_attn = attn_lib.mla_apply(
+            bp["attn"], h, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_head=cfg.v_head,
+            rope_theta=cfg.rope_theta, cache=attn_cache, cache_len=cache_len,
+            seq_shard=cfg.attn_seq_shard)
+    else:
+        a_out, new_attn = attn_lib.gqa_apply(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, cache=attn_cache,
+            cache_len=cache_len, causal=causal, window=window,
+            seq_shard=cfg.attn_seq_shard)
+
+    new_cache: Optional[Params] = None
+    if cfg.family == "hybrid":
+        dt = x.dtype
+        s_in = h @ bp["ssm_in"].astype(dt)
+        ssm_state = None if cache is None else cache.get("ssm")
+        s_out, new_ssm = ssm_lib.mamba_apply(bp["ssm"], s_in, state=ssm_state)
+        a_out = 0.5 * (rmsnorm(a_out, bp["ln_attn_out"]) +
+                       rmsnorm(s_out, bp["ln_ssm_out"]))
+        if cache is not None:
+            new_cache = {"attn": new_attn, "ssm": new_ssm}
+    elif cache is not None:
+        new_cache = {"attn": new_attn}
+
+    x = x + a_out
+
+    if enc_out is not None:
+        hc = _apply_norm(cfg, x, bp["ln_cross"])
+        c_out, _ = _cross_attention(cfg, bp["cross"], hc, enc_out)
+        x = x + c_out
+
+    h2 = _apply_norm(cfg, x, bp["ln2"])
+    if "moe" in bp and not dense_ffn:
+        # Serving is drop-free: cap >= N so no token is ever cut by the
+        # capacity bound (cf = E/k makes cap = N exactly). Training keeps
+        # the configured capacity factor (drops are the skew signal).
+        cf = (max(cfg.capacity_factor, cfg.n_experts / cfg.top_k)
+              if cache is not None else cfg.capacity_factor)
+        f_out, mstats = moe_lib.moe_apply(
+            bp["moe"], h2, top_k=cfg.top_k,
+            capacity_factor=cf,
+            expert_routing=moe_routing, return_stats=True,
+            token_groups=cfg.moe_token_groups)
+        stats.update(mstats)
+    else:
+        f_out = swiglu(h2, bp["mlp"]) if cfg.act == "swiglu" else gelu_mlp(h2, bp["mlp"])
+    x = x + f_out
+    return x, new_cache, stats
+
+
+def _cross_attention(cfg: ModelConfig, p: Params, x, enc_out):
+    """Decoder->encoder attention (whisper): no rope, no mask."""
+    B, S, D = x.shape
+    dt = x.dtype
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (enc_out.astype(dt) @ p["wk"].astype(dt)).reshape(B, -1, H, hd)
+    v = (enc_out.astype(dt) @ p["wv"].astype(dt)).reshape(B, -1, H, hd)
+    out = attn_lib.flash_attention_ref(q, k, v, causal=False)
+    out = out.reshape(B, S, H * hd).astype(dt)
+    return out @ p["wo"].astype(dt), None
+
+
+# ===================================================================== #
+# Full forward                                                           #
+# ===================================================================== #
+def _layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """Hybrid: which scanned layers use full attention (first/mid/last)."""
+    n = cfg.n_layers - cfg.first_k_dense
+    flags = jnp.zeros((n,), bool)
+    if cfg.family == "hybrid":
+        full = {0, n // 2, n - 1}
+        flags = jnp.array([i in full for i in range(n)])
+    return flags
+
+
+def _run_encoder(params: Params, cfg: ModelConfig, frames: jnp.ndarray):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = frames.astype(cdt) + params["enc_pos"].astype(cdt)[None]
+
+    def body(x, bp):
+        y, _, _ = _block_apply(cfg, bp, x, causal=False)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _apply_norm(cfg, x, params["ln_enc"])
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    remat: bool = True,
+    moe_routing: Optional[jnp.ndarray] = None,   # [L_scan, E, P] balancer
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Train/prefill forward: full-sequence logits + aux stats."""
+    cdt = dtype_of(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cdt)
+
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(cdt), x], axis=1)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(params, cfg, batch["frames"])
+
+    for bp in params.get("dense_blocks", []):
+        x, _, _ = _block_apply(cfg, bp, x, dense_ffn=True)
+
+    flags = _layer_flags(cfg)
+    T = x.shape[1]
+    windows = (jnp.where(flags, jnp.asarray(2 ** 30, jnp.int32),
+                         jnp.asarray(max(cfg.swa_window, 1), jnp.int32))
+               if cfg.family == "hybrid" else None)
+
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    n_slots = (moe_routing.shape[-1] if moe_routing is not None
+               else max(cfg.n_experts, 1))
+
+    def body(x, inp):
+        bp, win, routing = inp
+        y, _, stats = _block_apply(
+            cfg, bp, x, enc_out=enc_out,
+            window=win if cfg.family == "hybrid" else None,
+            moe_routing=routing if moe_routing is not None else None)
+        if cfg.seq_parallel_residual:
+            # §Perf: keep the residual carry (and hence the remat-saved
+            # layer inputs) sequence-sharded over the model axis.
+            from .layers import UNC, maybe_shard
+            y = maybe_shard(y, UNC, "model", UNC)
+        agg = (
+            stats.get("aux_loss", jnp.zeros((), jnp.float32)),
+            stats.get("dropped_frac", jnp.zeros((), jnp.float32)),
+            stats.get("tokens_per_expert_router",
+                      jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)),
+            stats.get("tokens_per_expert",
+                      jnp.zeros((n_slots,), jnp.float32)),
+        )
+        return y, agg
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    routing_xs = (moe_routing if moe_routing is not None
+                  else jnp.zeros((n_scan,), jnp.int32))
+    xs = (params["blocks"],
+          windows if windows is not None else jnp.zeros((n_scan,), jnp.int32),
+          routing_xs)
+    x, (aux_l, drop_f, tpe_router, tpe_slot) = jax.lax.scan(body, x, xs)
+
+    x = _apply_norm(cfg, x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    stats = {
+        "aux_loss": aux_l.mean(),
+        "dropped_frac": drop_f.mean(),
+        "tokens_per_expert": tpe_router.sum(0),
+        "tokens_per_expert_layers": tpe_router,   # [L_scan, E] router demand
+        "tokens_per_slot_layers": tpe_slot,       # [L_scan, P] post-routing
+    }
+    return logits, stats
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, aux_weight: float = 0.01, remat: bool = True,
+            moe_routing: Optional[jnp.ndarray] = None):
+    logits, stats = forward(params, cfg, batch, remat=remat,
+                            moe_routing=moe_routing)
+    labels = batch["labels"]
+    n_text = labels.shape[1]
+    logits_text = logits[:, -n_text:]
+    loss = cross_entropy(logits_text, labels)
+    if cfg.n_experts:
+        loss = loss + aux_weight * stats["aux_loss"]
+    return loss, stats
+
+
+# ===================================================================== #
+# KV caches & decode                                                     #
+# ===================================================================== #
+def _block_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    cdt = dtype_of(cfg.compute_dtype)
+    if cfg.family == "ssm":
+        st = ssm_lib.rwkv6_state_init(batch, cfg.d_model, cfg.n_heads, jnp.float32)
+        return {"wkv": st["wkv"], "shift": st["shift"],
+                "cshift": jnp.zeros((batch, 1, cfg.d_model), jnp.float32)}
+    if cfg.attn == "mla":
+        c = {"attn": attn_lib.mla_cache_init(batch, max_len, cfg.kv_lora,
+                                             cfg.qk_rope, cdt)}
+    else:
+        c = {"attn": attn_lib.gqa_cache_init(batch, max_len, cfg.n_kv_heads,
+                                             cfg.hd, cdt)}
+    if cfg.family == "hybrid":
+        c["ssm"] = jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    blocks = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_scan,) + x.shape),
+        _block_cache(cfg, batch, max_len))
+    cache: Params = {"blocks": blocks}
+    if cfg.first_k_dense:
+        cache["dense_blocks"] = [
+            _block_cache(cfg, batch, max_len) for _ in range(cfg.first_k_dense)]
+    if cfg.family == "encdec":
+        cache["enc_out"] = jnp.zeros(
+            (batch, cfg.enc_seq, cfg.d_model), dtype_of(cfg.compute_dtype))
+    return cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,            # [B, S_new]  (S_new = 1 for decode)
+    cache: Params,
+    cache_len: jnp.ndarray,         # scalar int32: current cache fill
+    *,
+    embeds: Optional[jnp.ndarray] = None,  # pre-embedded segment (VLM patches)
+) -> Tuple[jnp.ndarray, Params]:
+    """One serve step: append tokens, return last-position logits + cache."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = (embeds.astype(cdt) if embeds is not None
+         else params["embed"][tokens].astype(cdt))
+    enc_out = cache.get("enc_out")
+
+    new_cache: Params = dict(cache)
+    if cfg.first_k_dense:
+        nd = []
+        for bp, bc in zip(params["dense_blocks"], cache["dense_blocks"]):
+            x, c2, _ = _block_apply(cfg, bp, x, cache=bc, cache_len=cache_len,
+                                    dense_ffn=True)
+            nd.append(c2)
+        new_cache["dense_blocks"] = nd
+
+    flags = _layer_flags(cfg)
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    windows = (jnp.where(flags, jnp.asarray(2 ** 30, jnp.int32),
+                         jnp.asarray(max(cfg.swa_window, 1), jnp.int32))
+               if cfg.family == "hybrid" else jnp.zeros((n_scan,), jnp.int32))
+
+    def body(x, inp):
+        bp, bc, win = inp
+        y, c2, _ = _block_apply(
+            cfg, bp, x, cache=bc, cache_len=cache_len, enc_out=enc_out,
+            window=win if cfg.family == "hybrid" else None)
+        return y, c2
+
+    x, blocks2 = jax.lax.scan(body, x, (params["blocks"], cache["blocks"], windows))
+    new_cache["blocks"] = blocks2
+
+    x = _apply_norm(cfg, x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x[:, -1:] @ head.astype(x.dtype)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """Prompt ingestion: forward + cache fill (decode path with S=seq)."""
+    if cfg.family == "encdec":
+        cache = dict(cache)
+        cache["enc_out"] = _run_encoder(params, cfg, batch["frames"])
+    offset = jnp.zeros((), jnp.int32)
+    if cfg.family == "vlm" and "patches" in batch:
+        # Ingest the stubbed patch embeddings as the prompt prefix.
+        _, cache = decode_step(params, cfg, None, cache, offset,
+                               embeds=batch["patches"])
+        offset = jnp.asarray(batch["patches"].shape[1], jnp.int32)
+    tokens = batch["tokens"]
+    return decode_step(params, cfg, tokens, cache, offset)

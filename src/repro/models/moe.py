@@ -1,0 +1,294 @@
+"""Mixture-of-Experts layer with capacity-bounded einsum dispatch.
+
+Token->expert routing IS the paper's partitioning skew (tuples->keys):
+a hot expert is a heavy-hitter key, the expert-parallel placement is the
+partition function, and capacity overflow drops tokens — biasing visible
+training metrics exactly the way skew biases the analyst's bar chart.
+``repro/core/moe_balancer.py`` closes the loop by rewriting the
+expert-shard routing table (SBK = expert migration, SBR = replication).
+
+The data plane here is dense one-hot dispatch (MXU-friendly, shardable
+with experts on the ``model`` axis; XLA inserts the all-to-alls). The
+``assignment`` produced by the router is exposed so the balancer can
+observe per-expert token counts (phi) without extra passes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+def moe_init(key, d_model: int, d_expert: int, n_experts: int,
+             *, n_shared: int = 0, d_shared: Optional[int] = None,
+             n_replica_slots: int = 0, dtype=jnp.float32) -> Params:
+    """``n_replica_slots``: spare physical expert slots the Reshape
+    balancer can install hot-expert replicas into (SBR). Physical slot
+    count P = n_experts + n_replica_slots; router stays logical [E]."""
+    ks = jax.random.split(key, 5)
+    std_in = d_model ** -0.5
+    std_out = d_expert ** -0.5
+    P = n_experts + n_replica_slots
+    p: Params = {
+        "router": dense_init(ks[0], d_model, n_experts, dtype, scale=0.02),
+        # Expert weights stacked on a leading PHYSICAL slot axis (EP-sharded).
+        "w_gate": (jax.random.truncated_normal(ks[1], -3, 3,
+                   (P, d_model, d_expert)) * std_in).astype(dtype),
+        "w_up": (jax.random.truncated_normal(ks[2], -3, 3,
+                 (P, d_model, d_expert)) * std_in).astype(dtype),
+        "w_down": (jax.random.truncated_normal(ks[3], -3, 3,
+                   (P, d_expert, d_model)) * std_out).astype(dtype),
+    }
+    if n_shared > 0:
+        ds = d_shared or d_expert * n_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kk[0], d_model, ds, dtype),
+            "w_up": dense_init(kk[1], d_model, ds, dtype),
+            "w_down": dense_init(kk[2], ds, d_model, dtype, scale=ds ** -0.5),
+        }
+    return p
+
+
+def router_topk(logits: jnp.ndarray, top_k: int,
+                *, renormalize: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k gating. Returns (weights [N,k], indices [N,k])."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(gates, top_k)
+    if renormalize:
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, idx
+
+
+def moe_apply(
+    p: Params,
+    x: jnp.ndarray,                        # [B, S, D] or [N, D]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    expert_routing: Optional[jnp.ndarray] = None,   # [E, E_slots] balancer table
+    return_stats: bool = False,
+    token_groups: int = 1,
+):
+    """Capacity-bounded top-k MoE.
+
+    ``expert_routing``: optional row-stochastic [n_experts, n_experts]
+    table from the Reshape balancer remapping *logical* experts to
+    *physical* expert slots (SBK: a row's 1 moved; SBR: a row split — the
+    replicated hot expert). Identity when None.
+
+    ``token_groups``: G > 1 switches to the DP-local dispatch (§Perf
+    iteration 1): tokens are split into G groups (constrained to the
+    "data" mesh axis), the capacity/cumsum/scatter run *within* each
+    group, and every group computes E x cap_g expert rows. This keeps the
+    token dim sharded through dispatch — without it GSPMD all-gathers the
+    tokens and replicates the expert compute across the data axis.
+    """
+    if token_groups > 1:
+        return _moe_apply_grouped(p, x, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  expert_routing=expert_routing,
+                                  return_stats=return_stats,
+                                  G=token_groups)
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    P = p["w_gate"].shape[0]                           # physical slots
+    E = p["router"].shape[1]                           # logical experts
+    dt = x.dtype
+
+    logits = xf @ p["router"].astype(dt)               # [N, E]
+    weights, idx = router_topk(logits, top_k)          # [N,k]
+
+    # Combine one-hot dispatch over k choices: [N, E] (logical demand)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # [N,k,E]
+    gates_full = (weights[..., None] * onehot).sum(1)         # [N,E]
+
+    if expert_routing is not None:
+        # Reshape balancer: remap logical->physical slot mass, [E, P]
+        # row-stochastic. SBK moved a row's single 1 to another slot
+        # (expert migration); SBR split a row across a primary and a
+        # replica slot — tokens of the hot expert are divided between
+        # them by a deterministic low-discrepancy record split (the
+        # paper's split-by-records).
+        route = expert_routing.astype(jnp.float32)            # [E, P]
+        u = jnp.mod((jnp.arange(N, dtype=jnp.float32) + 1.0) * 0.618033988749895, 1.0)
+        cdf = jnp.cumsum(route, axis=1)                       # [E,P]
+        pick = (u[:, None, None] >= cdf[None]).sum(-1)        # [N,E] slot of e
+        pick = jnp.minimum(pick, P - 1)
+        slot_onehot = jax.nn.one_hot(pick, P, dtype=jnp.float32)  # [N,E,P]
+        combine = jnp.einsum("ne,nep->np", gates_full, slot_onehot)
+    elif P != E:
+        combine = jnp.pad(gates_full, ((0, 0), (0, P - E)))
+    else:
+        combine = gates_full
+
+    # Capacity per physical slot (tokens an expert shard will process).
+    cap = int(max(1, round(capacity_factor * N * top_k / E)))
+    # Position of each token within its expert slot queue (priority by
+    # arrival order): cumulative count per slot.
+    dispatch = (combine > 0).astype(jnp.int32)                # [N,E]
+    pos = jnp.cumsum(dispatch, axis=0) - dispatch             # [N,E]
+    keep = dispatch.astype(bool) & (pos < cap)
+    combine_c = combine * keep
+    dropped = (combine > 0) & ~keep
+
+    # Gather-based dispatch: build [E, cap] token indices (sentinel = N for
+    # empty slots), gather activations, run batched expert matmuls, and
+    # scatter-add back. FLOPs scale with E*cap ~= capacity_factor * N * k —
+    # the *active* compute, not the dense E*N (roofline-honest). This is
+    # the computation the Pallas moe_dispatch kernel implements in VMEM.
+    flat_slot = jnp.where(
+        keep, jnp.arange(P)[None, :] * cap + pos, P * cap)    # [N,P]
+    token_ids = jnp.broadcast_to(jnp.arange(N)[:, None], (N, P))
+    token_for_slot = (
+        jnp.full((P * cap + 1,), N, dtype=jnp.int32)
+        .at[flat_slot.reshape(-1)]
+        .set(token_ids.reshape(-1).astype(jnp.int32), mode="drop")
+    )[: P * cap].reshape(P, cap)
+    gate_for_slot = (
+        jnp.zeros((P * cap + 1,), jnp.float32)
+        .at[flat_slot.reshape(-1)]
+        .set(combine_c.reshape(-1), mode="drop")
+    )[: P * cap].reshape(P, cap)
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    h_in = xf_pad[token_for_slot].astype(dt)                  # [E,cap,D]
+    gate = jnp.einsum("ecd,edf->ecf", h_in, p["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", h_in, p["w_up"].astype(dt))
+    act = jax.nn.silu(gate) * up                              # [E,cap,F]
+    out_e = jnp.einsum("ecf,efd->ecd", act, p["w_down"].astype(dt))
+    out_e = out_e * gate_for_slot[..., None].astype(dt)
+    out = (
+        jnp.zeros((N + 1, D), dt)
+        .at[token_for_slot.reshape(-1)]
+        .add(out_e.reshape(-1, D), mode="drop")
+    )[:N]
+
+    if "shared" in p:
+        sh = p["shared"]
+        xs = xf.astype(dt)
+        g = jax.nn.silu(xs @ sh["w_gate"].astype(dt)) * (xs @ sh["w_up"].astype(dt))
+        out = out + g @ sh["w_down"].astype(dt)
+
+    out = out.reshape(orig_shape)
+    if not return_stats:
+        return out
+    stats = {
+        "tokens_per_expert": combine_c.sum(0),                 # post-mitigation
+        "tokens_per_expert_router": gates_full.sum(0),         # router's truth
+        "dropped_frac": dropped.mean(),
+        "load_std": combine.sum(0).std(),
+        "aux_loss": load_balance_aux_loss(logits, idx, E),
+    }
+    return out, stats
+
+
+def _moe_apply_grouped(p: Params, x: jnp.ndarray, *, top_k: int,
+                       capacity_factor: float,
+                       expert_routing: Optional[jnp.ndarray],
+                       return_stats: bool, G: int):
+    """DP-local dispatch: per-group capacity + scatter (see moe_apply)."""
+    from .layers import maybe_shard
+
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    assert N % G == 0, (N, G)
+    Nl = N // G
+    P = p["w_gate"].shape[0]
+    E = p["router"].shape[1]
+    dt = x.dtype
+
+    xg = maybe_shard(xf.reshape(G, Nl, D), "data", None, None)
+    logits = xg @ p["router"].astype(dt)                       # [G,Nl,E]
+    weights, idx = router_topk(logits.reshape(-1, E), top_k)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    gates_full = (weights[..., None] * onehot).sum(1)          # [N,E]
+
+    if expert_routing is not None:
+        route = expert_routing.astype(jnp.float32)
+        u = jnp.mod((jnp.arange(N, dtype=jnp.float32) + 1.0)
+                    * 0.618033988749895, 1.0)
+        cdf = jnp.cumsum(route, axis=1)
+        pick = (u[:, None, None] >= cdf[None]).sum(-1)
+        pick = jnp.minimum(pick, P - 1)
+        slot_onehot = jax.nn.one_hot(pick, P, dtype=jnp.float32)
+        combine = jnp.einsum("ne,nep->np", gates_full, slot_onehot)
+    elif P != E:
+        combine = jnp.pad(gates_full, ((0, 0), (0, P - E)))
+    else:
+        combine = gates_full
+
+    cg = combine.reshape(G, Nl, P)
+    cap = int(max(1, round(capacity_factor * Nl * top_k / E)))
+    dispatch = (cg > 0).astype(jnp.int32)
+    pos = jnp.cumsum(dispatch, axis=1) - dispatch              # within group
+    keep = dispatch.astype(bool) & (pos < cap)
+    cg_c = cg * keep
+    dropped = (cg > 0) & ~keep
+
+    flat_slot = jnp.where(keep, jnp.arange(P)[None, None, :] * cap + pos,
+                          P * cap)                             # [G,Nl,P]
+    token_ids = jnp.broadcast_to(jnp.arange(Nl)[None, :, None], (G, Nl, P))
+
+    def build(fs, ti, gate):
+        tslot = (jnp.full((P * cap + 1,), Nl, jnp.int32)
+                 .at[fs.reshape(-1)].set(ti.reshape(-1).astype(jnp.int32),
+                                         mode="drop"))[:P * cap]
+        gslot = (jnp.zeros((P * cap + 1,), jnp.float32)
+                 .at[fs.reshape(-1)].set(gate.reshape(-1),
+                                         mode="drop"))[:P * cap]
+        return tslot.reshape(P, cap), gslot.reshape(P, cap)
+
+    token_for_slot, gate_for_slot = jax.vmap(build)(flat_slot, token_ids,
+                                                    cg_c)      # [G,P,cap]
+    token_for_slot = maybe_shard(token_for_slot, "data", "model", None)
+
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    h_in = jax.vmap(lambda xp, ts: xp[ts])(xg_pad, token_for_slot).astype(dt)
+    h_in = maybe_shard(h_in, "data", "model", None, None)      # [G,P,cap,D]
+    gate = jnp.einsum("gpcd,pdf->gpcf", h_in, p["w_gate"].astype(dt))
+    up = jnp.einsum("gpcd,pdf->gpcf", h_in, p["w_up"].astype(dt))
+    act = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("gpcf,pfd->gpcd", act, p["w_down"].astype(dt))
+    out_e = out_e * gate_for_slot[..., None].astype(dt)
+
+    def combine_back(oe, ts):
+        return (jnp.zeros((Nl + 1, D), dt)
+                .at[ts.reshape(-1)].add(oe.reshape(-1, D), mode="drop"))[:Nl]
+
+    out = jax.vmap(combine_back)(out_e, token_for_slot)        # [G,Nl,D]
+    out = maybe_shard(out, "data", None, None).reshape(N, D)
+
+    if "shared" in p:
+        sh = p["shared"]
+        xs = xf.astype(dt)
+        g = jax.nn.silu(xs @ sh["w_gate"].astype(dt)) * (xs @ sh["w_up"].astype(dt))
+        out = out + g @ sh["w_down"].astype(dt)
+
+    out = out.reshape(orig_shape)
+    if not return_stats:
+        return out
+    stats = {
+        "tokens_per_expert": cg_c.sum((0, 1)),
+        "tokens_per_expert_router": gates_full.sum(0),
+        "dropped_frac": dropped.mean(),
+        "load_std": cg.sum((0, 1)).std(),
+        "aux_loss": load_balance_aux_loss(
+            logits.reshape(-1, E), idx, E),
+    }
+    return out, stats
+
+
+def load_balance_aux_loss(logits: jnp.ndarray, idx: jnp.ndarray, n_experts: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    pe = gates.mean(0)
+    fe = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32).mean(0)
+    return n_experts * jnp.sum(fe * pe)

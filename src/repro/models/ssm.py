@@ -1,0 +1,207 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and a Mamba-style SSM.
+
+Both decode in O(1) state per token — which is why the assigned
+``long_500k`` cell runs for rwkv6-1.6b and hymba-1.5b only.
+
+RWKV6 time-mix (data-dependent decay, arXiv:2404.05892, simplified but
+recurrence-faithful):
+    state_t = diag(exp(-exp(w_t))) @ state_{t-1} + k_t^T v_t       (per head)
+    o_t     = (r_t @ (state_{t-1} + diag(u) k_t^T v_t))
+with w_t data-dependent (the Finch contribution vs RWKV5's static decay).
+Train path uses lax.scan over time (the Pallas ``rwkv_scan`` kernel tiles
+this recurrence in VMEM on TPU); decode carries ``state``.
+
+Mamba-style head (for Hymba): selective SSM with data-dependent (dt, B, C),
+diagonal A; also a scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+# --------------------------------------------------------------------- #
+# RWKV6                                                                  #
+# --------------------------------------------------------------------- #
+def rwkv6_init(key, d_model: int, n_heads: int, dtype=jnp.float32) -> Params:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift mixing coefficients (per-channel)
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "wr": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wg": dense_init(ks[3], d_model, d_model, dtype),
+        # data-dependent decay: low-rank  w_t = w0 + tanh(x W_a) W_b
+        "w0": (jax.random.normal(ks[4], (d_model,)) * 0.1 - 6.0).astype(dtype),
+        "w_a": dense_init(ks[5], d_model, 64, dtype),
+        "w_b": dense_init(ks[6], 64, d_model, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[7], (n_heads, hd)) * 0.1).astype(dtype),
+        "wo": dense_init(ks[8], d_model, d_model, dtype),
+        "ln_x": jnp.ones((d_model,), dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} per position; ``last`` is the carry for decode ([B,1,D])."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv6_apply(
+    p: Params,
+    x: jnp.ndarray,                           # [B, S, D]
+    *,
+    n_heads: int,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+    chunk: int = 0,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (out, new_state). ``state`` = {"wkv": [B,H,hd,hd],
+    "shift": [B,1,D]} enables O(1) decode."""
+    B, S, D = x.shape
+    H = n_heads
+    hd = D // H
+    dt = x.dtype
+
+    last = None if state is None else state["shift"]
+    xprev = _token_shift(x, last)
+
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(dt)
+
+    r = (mix(p["mu_r"]) @ p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (mix(p["mu_k"]) @ p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (mix(p["mu_v"]) @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"].astype(dt))
+
+    # data-dependent decay (Finch): w_t in (0,1), per channel
+    wlin = p["w0"].astype(dt) + jnp.tanh(mix(p["mu_w"]) @ p["w_a"].astype(dt)) \
+        @ p["w_b"].astype(dt)
+    w = jnp.exp(-jnp.exp(wlin.astype(jnp.float32)))            # [B,S,D]
+    w = w.reshape(B, S, H, hd)
+
+    u = p["u"].astype(jnp.float32)                             # [H,hd]
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+
+    def step(wkv, inp):
+        r_t, k_t, v_t, w_t = inp                               # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]             # [B,H,hd,hd]
+        out_t = jnp.einsum("bhk,bhkv->bhv", r_t, wkv + u[..., None] * kv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, out_t
+
+    wkv0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+            else state["wkv"].astype(jnp.float32))
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w.astype(jnp.float32), 1, 0))
+    wkv_fin, outs = jax.lax.scan(step, wkv0, xs)               # outs [S,B,H,hd]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D).astype(dt)
+
+    # per-head groupnorm (ln_x simplified to RMS over channel)
+    o32 = out.astype(jnp.float32)
+    out = (o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, -1, keepdims=True) + 1e-6)
+           ).astype(dt) * p["ln_x"].astype(dt)
+    out = (out * g) @ p["wo"].astype(dt)
+
+    new_state = None
+    if state is not None:
+        new_state = {"wkv": wkv_fin.astype(state["wkv"].dtype),
+                     "shift": x[:, -1:, :].astype(state["shift"].dtype)}
+    return out, new_state
+
+
+def rwkv6_state_init(batch: int, d_model: int, n_heads: int,
+                     dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    hd = d_model // n_heads
+    return {
+        "wkv": jnp.zeros((batch, n_heads, hd, hd), dtype),
+        "shift": jnp.zeros((batch, 1, d_model), dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# RWKV6 channel-mix (the FFN half of an RWKV block)                      #
+# --------------------------------------------------------------------- #
+def rwkv6_cmix_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "wk": dense_init(k1, d_model, d_ff, dtype),
+        "wv": dense_init(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def rwkv6_cmix_apply(p: Params, x: jnp.ndarray,
+                     last: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    dt = x.dtype
+    xprev = _token_shift(x, last)
+    xk = x + (xprev - x) * p["mu_k"].astype(dt)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    out = h @ p["wv"].astype(dt)
+    new_last = None if last is None else x[:, -1:, :].astype(last.dtype)
+    return out, new_last
+
+
+# --------------------------------------------------------------------- #
+# Mamba-style selective SSM head (for Hymba)                             #
+# --------------------------------------------------------------------- #
+def mamba_init(key, d_inner: int, d_state: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        # diagonal A (negative for stability), learned in log space
+        "a_log": jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d_inner, 0).astype(dtype),
+        "w_dt": dense_init(ks[0], d_inner, d_inner, dtype, scale=0.01),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "w_b": dense_init(ks[1], d_inner, d_state, dtype),
+        "w_c": dense_init(ks[2], d_inner, d_state, dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+    }
+
+
+def mamba_apply(
+    p: Params,
+    x: jnp.ndarray,                          # [B, S, d_inner]
+    *,
+    state: Optional[jnp.ndarray] = None,     # [B, d_inner, d_state]
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    B, S, DI = x.shape
+    dt_ = x.dtype
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # [DI,N]
+    delta = jax.nn.softplus(x @ p["w_dt"].astype(dt_) +
+                            p["dt_bias"].astype(dt_)).astype(jnp.float32)
+    bmat = (x @ p["w_b"].astype(dt_)).astype(jnp.float32)      # [B,S,N]
+    cmat = (x @ p["w_c"].astype(dt_)).astype(jnp.float32)      # [B,S,N]
+    xf = x.astype(jnp.float32)
+
+    da = jnp.exp(delta[..., None] * a[None, None])             # [B,S,DI,N]
+    dbx = delta[..., None] * bmat[:, :, None, :] * xf[..., None]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t                                    # [B,DI,N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = (jnp.zeros((B, DI, a.shape[-1]), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+          jnp.moveaxis(cmat, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)                      # ys [S,B,DI]
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["d_skip"].astype(jnp.float32)
+    new_state = None if state is None else h_fin.astype(state.dtype)
+    return y.astype(dt_), new_state

@@ -1,0 +1,4 @@
+"""Serving: prefill + step-decode engine with slot retirement."""
+from .engine import Request, ServeEngine, make_prefill, make_serve_step
+
+__all__ = ["Request", "ServeEngine", "make_prefill", "make_serve_step"]

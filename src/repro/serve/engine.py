@@ -1,0 +1,132 @@
+"""Batched serving: prefill + step-decode with a functional KV cache.
+
+``serve_step`` is the jitted unit the decode cells lower: one new token
+per sequence against a seq_len-deep cache. The engine adds batched
+request handling (greedy/temperature sampling, per-slot EOS retirement —
+continuous-batching-lite: a finished slot is immediately refilled from the
+waiting queue using prefill-into-slot).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, tokens[B,1], cache, cache_len) -> logits, cache."""
+    def serve_step(params, tokens, cache, cache_len):
+        return model_lib.decode_step(params, cfg, tokens, cache, cache_len)
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill_fn(params, batch, cache):
+        return model_lib.prefill(params, cfg, batch, cache)
+    return prefill_fn
+
+
+class ServeEngine:
+    """Fixed-batch decode loop with slot retirement + refill."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, *, batch_size: int = 4,
+                 max_len: int = 256, eos_id: int = 0, temperature: float = 0.0,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._step = jax.jit(make_serve_step(cfg))
+        self._prefill = jax.jit(make_prefill(cfg))
+        self.waiting: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch_size
+        self.completed: List[Request] = []
+        self.tokens_decoded = 0
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------------ #
+    def _fill_batch(self) -> Tuple[Dict[str, jnp.ndarray], Any, jnp.ndarray]:
+        """Left-align all active prompts into one padded prefill batch."""
+        prompts = []
+        for i in range(self.B):
+            if self.active[i] is None and self.waiting:
+                self.active[i] = self.waiting.pop(0)
+            r = self.active[i]
+            prompts.append(r.prompt if r is not None else np.zeros(1, np.int32))
+        S = max(len(p) for p in prompts)
+        toks = np.zeros((self.B, S), dtype=np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, S - len(p):] = p      # right-aligned: last pos = last tok
+        batch = {"tokens": jnp.asarray(toks)}
+        cdt = jnp.bfloat16
+        if self.cfg.family == "encdec":
+            # stub frontend: precomputed frame embeddings (assignment rule)
+            batch["frames"] = jnp.zeros(
+                (self.B, self.cfg.enc_seq, self.cfg.d_model), cdt)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (self.B, self.cfg.n_patches, self.cfg.d_model), cdt)
+        cache = model_lib.init_cache(self.cfg, self.B, S + self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        return logits, cache, jnp.asarray(S, jnp.int32)
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits[:, -1], -1), dtype=np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits[:, -1] / self.temperature), dtype=np.int32)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Decode until all submitted requests complete."""
+        while (self.waiting or any(r is not None for r in self.active)) \
+                and max_steps > 0:
+            logits0, cache, pos = self._fill_batch()
+            step_tok = self._sample(logits0)
+            for i, r in enumerate(self.active):
+                if r is not None:
+                    r.out_tokens.append(int(step_tok[i]))
+            steps_left = min(self.max_len,
+                             max((r.max_new_tokens for r in self.active
+                                  if r is not None), default=0))
+            for _ in range(steps_left):
+                max_steps -= 1
+                logits, cache = self._step(
+                    self.params, jnp.asarray(step_tok[:, None]), cache, pos)
+                pos = pos + 1
+                step_tok = self._sample(logits)
+                self.tokens_decoded += int(sum(r is not None for r in self.active))
+                for i, r in enumerate(self.active):
+                    if r is None:
+                        continue
+                    t = int(step_tok[i])
+                    r.out_tokens.append(t)
+                    if t == self.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+                        self.completed.append(r)
+                        self.active[i] = None
+                if all(r is None for r in self.active) and not self.waiting:
+                    break
+                if any(r is None for r in self.active) and self.waiting:
+                    break                   # refill: re-prefill the batch
+        return self.completed

@@ -1,0 +1,280 @@
+"""Training loop: jitted train_step with GSPMD shardings, MoE-balancer
+integration (routing table as a traced arg + replica grad merge), gradient
+compression, and checkpoint/restart.
+
+The Reshape control loop during training:
+
+  1. train_step returns per-layer router demand & slot loads,
+  2. the host-side MoEReshapeBalancer runs the skew test / two-phase plan,
+  3. its routing-table rewrite is a *traced-argument swap* (no recompile) —
+     the control message of the paper,
+  4. pending expert-weight copies (state migration) execute between steps,
+  5. replica gradients (scattered state, §5.4) are merged inside the step
+     via a traced slot->primary map, and the updated primary weights are
+     re-broadcast to replicas — the END-marker merge every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec, dtype_of
+from ..core.moe_balancer import MoEBalancerConfig, MoEReshapeBalancer
+from ..dist import compression, sharding
+from ..models import model as model_lib
+from . import optimizer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    opt: optimizer.AdamWConfig = dataclasses.field(default_factory=optimizer.AdamWConfig)
+    remat: bool = True
+    grad_compression: bool = False
+    moe_balancer: Optional[MoEBalancerConfig] = None
+    aux_weight: float = 0.01
+    checkpoint_every: int = 200
+    checkpoint_dir: Optional[str] = None
+
+
+class TrainState:
+    """params + opt state (+ compression error, balancer tables)."""
+
+    def __init__(self, params, opt_state, err=None):
+        self.params = params
+        self.opt_state = opt_state
+        self.err = err
+
+    def tree(self):
+        t = {"params": self.params, "opt": self.opt_state}
+        if self.err is not None:
+            t["err"] = self.err
+        return t
+
+
+def merge_replica_grads(grads: Any, merge_map: jnp.ndarray, n_scan: int) -> Any:
+    """Sum replica-slot MoE grads into their primary slot.
+
+    ``merge_map``: [L, P] -> primary slot per layer (identity when
+    unreplicated). The replica slots' grads are scattered state (§5.4);
+    the per-layer segment-sum is the END-marker merge. Applied to the
+    stacked [L, P, ...] expert weights.
+    """
+    def merge(leaf):
+        # [L, P, ...] expert-stacked leaves only (identified by P == map len)
+        if leaf.ndim >= 2 and leaf.shape[:2] == merge_map.shape:
+            return jax.vmap(
+                lambda g, m: jnp.zeros_like(g).at[m].add(g))(leaf, merge_map)
+        return leaf
+
+    if "blocks" in grads and isinstance(grads["blocks"], dict) and \
+            "moe" in grads["blocks"]:
+        g = dict(grads)
+        blocks = dict(g["blocks"])
+        moe = dict(blocks["moe"])
+        for name in ("w_gate", "w_up", "w_down"):
+            moe[name] = merge(moe[name])
+        blocks["moe"] = moe
+        g["blocks"] = blocks
+        return g
+    return grads
+
+
+def broadcast_replicas(params: Any, merge_map: jnp.ndarray) -> Any:
+    """After the optimizer step, refresh every replica slot from its
+    primary so replicas never drift (one gather on the slot axis)."""
+    def bcast(leaf):
+        if leaf.ndim >= 2 and leaf.shape[:2] == merge_map.shape:
+            return jax.vmap(lambda w, m: w[m])(leaf, merge_map)
+        return leaf
+
+    if "blocks" in params and isinstance(params["blocks"], dict) and \
+            "moe" in params["blocks"]:
+        p = dict(params)
+        blocks = dict(p["blocks"])
+        moe = dict(blocks["moe"])
+        for name in ("w_gate", "w_up", "w_down"):
+            moe[name] = bcast(moe[name])
+        blocks["moe"] = moe
+        p["blocks"] = blocks
+        return p
+    return params
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *,
+                    use_balancer: bool = False):
+    """Returns train_step(state_tree, batch, moe_routing, merge_map)."""
+
+    def step(tree, batch, moe_routing, merge_map):
+        params = tree["params"]
+
+        def lf(p, b):
+            return model_lib.loss_fn(
+                p, cfg, b, aux_weight=tc.aux_weight, remat=tc.remat,
+                moe_routing=moe_routing if use_balancer else None)
+
+        mb = max(getattr(cfg, "train_microbatch", 1), 1)
+        if mb > 1:
+            # Gradient accumulation: scan over microbatches; activation
+            # memory divides by mb, grads accumulate in fp32.
+            split = {k: v.reshape(mb, v.shape[0] // mb, *v.shape[1:])
+                     for k, v in batch.items()}
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_body(acc, mbatch):
+                (l, st), g = jax.value_and_grad(lf, has_aux=True)(
+                    params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, (l, st)
+
+            grads, (losses, stats_all) = jax.lax.scan(acc_body, g0, split)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = losses.mean()
+            stats = jax.tree.map(lambda s: s.mean(0) if s.ndim else s.mean(),
+                                 stats_all)
+        else:
+            (loss, stats), grads = jax.value_and_grad(lf, has_aux=True)(
+                params, batch)
+        if use_balancer and merge_map is not None:
+            grads = merge_replica_grads(grads, merge_map,
+                                        cfg.n_layers - cfg.first_k_dense)
+        if tc.grad_compression and "err" in tree:
+            grads, new_err = compression.compress_tree(grads, tree["err"])
+        else:
+            new_err = tree.get("err")
+        new_params, new_opt = optimizer.update(tc.opt, params, grads, tree["opt"])
+        if use_balancer and merge_map is not None:
+            new_params = broadcast_replicas(new_params, merge_map)
+        out = {"params": new_params, "opt": new_opt}
+        if new_err is not None:
+            out["err"] = new_err
+        metrics = {
+            "loss": loss,
+            "dropped_frac": stats["dropped_frac"],
+            "tokens_per_expert_layers": stats["tokens_per_expert_layers"],
+            "tokens_per_slot_layers": stats["tokens_per_slot_layers"],
+        }
+        return out, metrics
+
+    return step
+
+
+def jit_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh,
+                   state_shape: Any, batch_shape: Any, *,
+                   use_balancer: bool = False):
+    """pjit the step with param/opt/batch shardings + donated state."""
+    pspec = sharding.param_pspecs(cfg, mesh)
+    opt_m = sharding.opt_pspecs(pspec, state_shape["params"], mesh)
+    tree_spec = {"params": pspec,
+                 "opt": optimizer.AdamWState(step=P(), m=opt_m, v=opt_m)._asdict()}
+    tree_spec["opt"] = optimizer.AdamWState(step=P(), m=opt_m, v=opt_m)
+    if "err" in state_shape:
+        tree_spec["err"] = opt_m
+    dp = sharding.data_axes(mesh)
+    bspec = {k: P(dp, *([None] * (len(v.shape) - 1)))
+             for k, v in batch_shape.items()}
+    step = make_train_step(cfg, tc, use_balancer=use_balancer)
+    in_shardings = (
+        sharding.shardings_of(tree_spec, mesh),
+        sharding.shardings_of(bspec, mesh),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (sharding.shardings_of(tree_spec, mesh), None)
+    return jax.jit(step, in_shardings=in_shardings,
+                   out_shardings=out_shardings, donate_argnums=(0,))
+
+
+# --------------------------------------------------------------------- #
+# Host-side training driver with the Reshape balancer in the loop        #
+# --------------------------------------------------------------------- #
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, *, key=None,
+                 mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.tc = tc
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = model_lib.init_params(cfg, key)
+        self.opt_state = optimizer.init(self.params)
+        self.err = compression.init_error(self.params) if tc.grad_compression else None
+        self.mesh = mesh
+        self.step_num = 0
+        self.metrics_log: List[Dict[str, float]] = []
+
+        self.balancers: List[MoEReshapeBalancer] = []
+        self.use_balancer = tc.moe_balancer is not None and cfg.n_experts > 0
+        if self.use_balancer:
+            n_scan = cfg.n_layers - cfg.first_k_dense
+            self.balancers = [MoEReshapeBalancer(tc.moe_balancer)
+                              for _ in range(n_scan)]
+        self._step_fn = make_train_step(cfg, tc, use_balancer=self.use_balancer)
+        self._jitted = jax.jit(self._step_fn, donate_argnums=(0,))
+
+    # -- balancer arrays ------------------------------------------------ #
+    def moe_routing(self) -> Optional[jnp.ndarray]:
+        if not self.use_balancer:
+            return None
+        return jnp.asarray(np.stack([b.state.expert_routing
+                                     for b in self.balancers]), jnp.float32)
+
+    def merge_map(self) -> Optional[jnp.ndarray]:
+        if not self.use_balancer:
+            return None
+        return jnp.asarray(
+            np.stack([b.grad_merge_map() for b in self.balancers]))
+
+    def train_step(self, batch: Dict[str, jnp.ndarray]) -> Dict[str, float]:
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.err is not None:
+            tree["err"] = self.err
+        routing = self.moe_routing()
+        mm = self.merge_map()
+        zero = jnp.zeros((), jnp.int32)
+        tree, metrics = self._jitted(tree, batch,
+                                     routing if routing is not None else zero,
+                                     mm if mm is not None else zero)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.err = tree.get("err")
+
+        out = {"loss": float(metrics["loss"]),
+               "dropped_frac": float(metrics["dropped_frac"])}
+        if self.use_balancer:
+            tpe = np.asarray(metrics["tokens_per_expert_layers"])
+            tps = np.asarray(metrics["tokens_per_slot_layers"])
+            changed = False
+            for li, bal in enumerate(self.balancers):
+                bal.observe(self.step_num, tps[li], tpe[li])
+                if bal.pending_copies:
+                    self._apply_copies(li, bal)
+                    changed = True
+            if changed:
+                pass  # routing tables re-read next step (traced args)
+            out["representativeness"] = float(np.mean([
+                b.representativeness(tps[i], tpe[i])
+                for i, b in enumerate(self.balancers)]))
+        self.step_num += 1
+        self.metrics_log.append(out)
+        return out
+
+    def _apply_copies(self, layer: int, bal: MoEReshapeBalancer) -> None:
+        """Execute expert-weight state migration for one layer (between
+        steps — the synchronized point; cost = bytes_migrated)."""
+        moe = self.params["blocks"]["moe"]
+        sub = {k: moe[k][layer] for k in ("w_gate", "w_up", "w_down")}
+        new_sub = bal.apply_pending(sub)
+        new_moe = dict(moe)
+        for k in ("w_gate", "w_up", "w_down"):
+            new_moe[k] = moe[k].at[layer].set(new_sub[k])
+            # keep optimizer state consistent: replicas adopt primary m/v
+        blocks = dict(self.params["blocks"])
+        blocks["moe"] = new_moe
+        self.params = dict(self.params, blocks=blocks)

@@ -1,0 +1,346 @@
+"""Unit + property tests for the Reshape control plane (repro.core)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MeanModelEstimator,
+    ReshapeConfig,
+    RoutingTable,
+    TransferMode,
+    WorkloadTracker,
+    adjust_tau,
+    assign_helpers,
+    chi_for_helpers,
+    choose_helpers,
+    choose_mode,
+    choose_strategy,
+    load_reduction,
+    max_load_reduction,
+    phase2_fraction,
+    phase2_fractions_multi,
+    plan_phase1,
+    plan_phase2,
+    sbk_key_subset,
+    skew_pairs,
+    skew_test,
+    tau_prime,
+)
+from repro.core.state_migration import OperatorTraits, can_scatter
+from repro.core.types import MigrationStrategy, StateMutability
+
+
+# --------------------------------------------------------------------- #
+# Skew test (eq. 1-2) and helper assignment (§2.1)
+# --------------------------------------------------------------------- #
+class TestSkewTest:
+    def test_inequalities(self):
+        assert skew_test(200, 50, eta=100, tau=100)
+        assert not skew_test(90, 0, eta=100, tau=50)      # eq.1 fails
+        assert not skew_test(200, 150, eta=100, tau=100)  # eq.2 fails
+        assert skew_test(100, 0, eta=100, tau=100)        # boundary
+
+    def test_pairs_exclude_busy(self):
+        phi = [500, 10, 20, 400]
+        pairs = skew_pairs(phi, 100, 100, busy=[0])
+        assert all(l != 0 and c != 0 for l, c in pairs)
+        assert (3, 1) in pairs
+
+    def test_assignment_greedy_most_loaded_first(self):
+        phi = [500, 10, 20, 400]
+        a = assign_helpers(phi, 100, 100)
+        # most loaded (0) picks least loaded (1); 3 picks 2
+        assert a[0] == [1] and a[3] == [2]
+
+    def test_helpers_disjoint_from_skewed(self):
+        phi = [500, 400, 10, 15]
+        a = assign_helpers(phi, 100, 100)
+        helpers = [h for hs in a.values() for h in hs]
+        assert set(helpers).isdisjoint(a.keys())
+
+    @given(st.lists(st.floats(0, 1e6), min_size=2, max_size=24),
+           st.floats(0, 1e3), st.floats(0, 1e3))
+    @settings(max_examples=50, deadline=None)
+    def test_assignment_sound(self, phi, eta, tau):
+        a = assign_helpers(phi, eta, tau)
+        for s, helpers in a.items():
+            assert phi[s] >= eta
+            for h in helpers:
+                assert phi[s] - phi[h] >= tau
+                assert h != s
+
+
+# --------------------------------------------------------------------- #
+# Estimator psi + stderr (§4.3.2)
+# --------------------------------------------------------------------- #
+class TestEstimator:
+    def test_mean_and_stderr(self):
+        e = MeanModelEstimator(window=8)
+        for v in [10, 12, 8, 10]:
+            e.observe(v)
+        assert e.predict() == pytest.approx(10.0)
+        d = np.std([10, 12, 8, 10], ddof=1)
+        assert e.stderr() == pytest.approx(d * math.sqrt(1 + 1 / 4))
+
+    def test_stderr_infinite_below_two_samples(self):
+        e = MeanModelEstimator()
+        assert e.stderr() == float("inf")
+        e.observe(5)
+        assert e.stderr() == float("inf")
+
+    def test_stderr_sample_factor_decreases_with_n(self):
+        """For fixed sample variance, eps = d*sqrt(1+1/n) shrinks with n
+        (the §4.2 mechanism: larger sample -> better phase-2 estimate)."""
+        e = MeanModelEstimator(window=64)
+        errs = []
+        for i in range(40):
+            e.observe(90.0 if i % 2 == 0 else 110.0)  # constant variance
+            if i in (3, 11, 39):
+                errs.append(e.stderr())
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_tracker_shares(self):
+        t = WorkloadTracker(4)
+        for _ in range(3):
+            t.update([0, 0, 0, 0], [10, 20, 30, 40])
+        np.testing.assert_allclose(t.predicted_shares(), [0.1, 0.2, 0.3, 0.4])
+
+    def test_tracker_reset(self):
+        t = WorkloadTracker(2)
+        t.update([0, 0], [10, 20])
+        t.update([0, 0], [10, 20])
+        t.reset_samples([0])
+        assert t.sample_size(0) == 0 and t.sample_size(1) == 2
+
+
+# --------------------------------------------------------------------- #
+# RoutingTable (the partition function)
+# --------------------------------------------------------------------- #
+class TestRoutingTable:
+    def test_hash_init_one_hot(self):
+        rt = RoutingTable(10, 4)
+        assert (rt.weights.sum(axis=1) == 1).all()
+        assert (rt.weights.max(axis=1) == 1).all()
+        assert (rt.owner == np.arange(10) % 4).all()
+
+    def test_move_and_split(self):
+        rt = RoutingTable(6, 3)
+        rt.move_key(0, 2)
+        assert rt.weights[0, 2] == 1
+        rt.split_key(1, [1, 2], [0.25, 0.75])
+        np.testing.assert_allclose(rt.weights[1], [0, 0.25, 0.75])
+
+    def test_rows_always_stochastic_after_any_mutation(self):
+        rt = RoutingTable(8, 4)
+        rt.redirect_worker(0, 1)
+        rt.split_key(2, [0, 3], [0.5, 0.5])
+        rt.move_key(3, 0)
+        np.testing.assert_allclose(rt.weights.sum(axis=1), 1.0)
+        assert (rt.weights >= 0).all()
+
+    def test_redirect_then_restore(self):
+        rt = RoutingTable(8, 4)
+        before = rt.as_array()
+        moved = rt.redirect_worker(1, 2)
+        assert all(rt.weights[k, 1] == 0 for k in moved)
+        rt.restore_keys(moved, before[moved])
+        np.testing.assert_allclose(rt.as_array(), before)
+
+    @given(st.integers(2, 6), st.integers(1, 50),
+           st.floats(0.05, 0.95))
+    @settings(max_examples=30, deadline=None)
+    def test_drr_split_conservation(self, workers, n_chunks, frac):
+        """Deficit-RR: over n records of one key, worker shares deviate
+        from the ideal split by < 1 record at every prefix."""
+        rt = RoutingTable(1, workers)
+        rt.split_key(0, [0, 1], [frac, 1 - frac])
+        n = n_chunks * 4
+        dest = rt.route(np.zeros(n, dtype=np.int64))
+        got0 = np.cumsum(dest == 0)
+        ideal = frac * np.arange(1, n + 1)
+        assert np.abs(got0 - ideal).max() < 1.0 + 1e-9
+
+    def test_lowdiscrepancy_matches_ops_twin(self):
+        import jax.numpy as jnp
+        from repro.core.ops import per_key_counters, route_records
+        rt = RoutingTable(5, 4)
+        rt.split_key(0, [0, 1], [0.3, 0.7])
+        keys = np.array([0, 1, 0, 2, 0, 0, 1], dtype=np.int64)
+        counters = np.array([0, 0, 1, 0, 2, 3, 1])
+        host = rt.route_lowdiscrepancy(keys, counters)
+        dev = route_records(jnp.asarray(rt.weights), jnp.asarray(keys),
+                            jnp.asarray(counters))
+        np.testing.assert_array_equal(host, np.asarray(dev))
+        # counters twin
+        c = per_key_counters(jnp.asarray(keys), 5)
+        want = [0, 0, 1, 0, 2, 3, 1]
+        np.testing.assert_array_equal(np.asarray(c), want)
+
+    def test_version_bumps_notify_listener(self):
+        rt = RoutingTable(4, 2)
+        events = []
+        rt.listener = lambda ks, old, new: events.append(list(ks))
+        rt.move_key(1, 0)
+        rt.split_key(2, [0, 1], [0.5, 0.5])
+        assert events == [[1], [2]]
+        assert rt.version == 2
+
+
+# --------------------------------------------------------------------- #
+# Load transfer math (§3) + LR accounting (§4.1)
+# --------------------------------------------------------------------- #
+class TestLoadTransfer:
+    def test_paper_running_example_fraction(self):
+        # J6:J4 = 26:7 -> redirect 19/52 ~ 9/26 of J6's input (§3.1)
+        r = phase2_fraction(26 / 33, 7 / 33)
+        assert r == pytest.approx(19 / 52)
+
+    def test_fraction_clamped(self):
+        assert phase2_fraction(0.1, 0.5) == 0.0
+        assert phase2_fraction(0.0, 0.0) == 0.0
+
+    def test_multi_helper_equalization(self):
+        fr = phase2_fractions_multi(0.6, [0.1, 0.2])
+        # everyone should end at (0.6+0.1+0.2)/3 = 0.3
+        f_s = 0.6 * (1 - sum(fr))
+        assert f_s == pytest.approx(0.3)
+        assert 0.1 + fr[0] * 0.6 == pytest.approx(0.3)
+        assert 0.2 + fr[1] * 0.6 == pytest.approx(0.3)
+
+    def test_sbk_subset_cannot_split_hot_key(self):
+        shares = {0: 0.5, 1: 0.01}
+        keys, got = sbk_key_subset(shares, target=0.25)
+        assert 0 not in keys and got <= 0.25 + 1e-9
+
+    def test_plan_phase1_redirects_whole_partition(self):
+        rt = RoutingTable(8, 4)
+        plan = plan_phase1(rt, skewed=1, helpers=[2])
+        plan.apply(rt)
+        assert len(rt.keys_of(1)) == 0
+        np.testing.assert_allclose(rt.weights.sum(axis=1), 1.0)
+
+    def test_plan_phase2_sbr_splits(self):
+        rt = RoutingTable(8, 4)
+        shares = np.array([0.7, 0.1, 0.1, 0.1])
+        plan = plan_phase2(rt, 0, [1], shares, mode=TransferMode.SBR)
+        plan.apply(rt)
+        for k in rt.owned_by(0):
+            assert 0 < rt.weights[k, 0] < 1
+            assert rt.weights[k, 1] > 0
+
+    def test_plan_phase2_sbk_moves_whole_keys(self):
+        rt = RoutingTable(8, 4)
+        shares = np.array([0.7, 0.1, 0.1, 0.1])
+        key_shares = {0: 0.4, 4: 0.3}
+        plan = plan_phase2(rt, 0, [1], shares, mode=TransferMode.SBK,
+                           key_shares=key_shares)
+        plan.apply(rt)
+        assert set(np.unique(rt.weights)) <= {0.0, 1.0}
+
+    def test_load_reduction_accounting(self):
+        lr = load_reduction({0: 1000, 1: 200}, {0: 620, 1: 580})
+        assert lr == 380
+        assert max_load_reduction({0: 1000, 1: 200}) == 400  # D/2
+
+    @given(st.lists(st.floats(1, 1e5), min_size=2, max_size=8))
+    @settings(max_examples=40, deadline=None)
+    def test_lr_max_is_upper_bound_for_equalizing_transfers(self, totals):
+        """No mitigation that only moves load from max to others can beat
+        LR_max = max - mean."""
+        t = {i: v for i, v in enumerate(totals)}
+        ideal = float(np.mean(totals))
+        mitigated = {i: ideal for i in t}
+        assert load_reduction(t, mitigated) == pytest.approx(
+            max_load_reduction(t), rel=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# Adaptive tau (§4.3.2, Algorithm 1) + §6.1 correction
+# --------------------------------------------------------------------- #
+class TestAdaptiveTau:
+    def cfg(self, **kw):
+        return ReshapeConfig(**kw)
+
+    def test_increase_branch(self):
+        d = adjust_tau(phi_s=500, phi_h=100, eps=200, tau=100, cfg=self.cfg())
+        assert d.action == "increase" and d.mitigate_now
+        assert d.tau == 150  # +50 (paper §7.6)
+
+    def test_decrease_branch(self):
+        d = adjust_tau(phi_s=500, phi_h=450, eps=10, tau=1000, cfg=self.cfg())
+        assert d.action == "decrease" and d.mitigate_now
+        assert d.tau == pytest.approx(50)
+
+    def test_keep_inside_band(self):
+        d = adjust_tau(phi_s=500, phi_h=100, eps=100, tau=100, cfg=self.cfg())
+        assert d.action == "keep" and d.mitigate_now
+
+    def test_budget_exhausted(self):
+        d = adjust_tau(500, 100, 200, 100, self.cfg(), adjustments_used=3)
+        assert d.action == "keep"
+
+    def test_tau_prime_migration_correction(self):
+        # gap widens by (f_s - f_h) * t * M during migration
+        assert tau_prime(1000, 0.3, 0.1, rate=100, migration_ticks=10) == \
+            pytest.approx(1000 - 0.2 * 100 * 10)
+        assert tau_prime(10, 0.9, 0.1, 100, 100) == 0.0  # floored
+
+
+# --------------------------------------------------------------------- #
+# Multi-helper selection chi = min(LR_max, F) (§6.2)
+# --------------------------------------------------------------------- #
+class TestHelpers:
+    def test_chi_tradeoff_figure13(self):
+        f = np.array([0.6, 0.05, 0.1, 0.15, 0.1])
+        # M grows with helper count; F shrinks; chi peaks then falls
+        choice = choose_helpers(
+            f, 0, [1, 2, 3, 4], tuples_left=10_000, rate=10,
+            migration_ticks_fn=lambda n: 40.0 * n ** 2, max_helpers=4)
+        assert 1 <= len(choice.helpers) < 4
+        assert choice.chi > 0
+
+    def test_zero_migration_uses_all_helpers(self):
+        f = np.array([0.7, 0.1, 0.1, 0.1])
+        choice = choose_helpers(
+            f, 0, [1, 2, 3], tuples_left=1000, rate=10,
+            migration_ticks_fn=lambda n: 0.0, max_helpers=3)
+        assert len(choice.helpers) == 3
+
+    def test_chi_formula(self):
+        f = np.array([0.6, 0.2])
+        chi, lr_max, fut = chi_for_helpers(
+            f, 0, [1], tuples_left=1000, rate=10, migration_ticks=10)
+        assert lr_max == pytest.approx((0.6 - 0.4) * 1000)
+        assert fut == pytest.approx((1000 - 100) * 0.6)
+        assert chi == pytest.approx(min(lr_max, fut))
+
+
+# --------------------------------------------------------------------- #
+# State-migration decision tree (§5, Fig. 10)
+# --------------------------------------------------------------------- #
+class TestStateMigration:
+    def test_immutable_replicates(self):
+        t = OperatorTraits("probe", StateMutability.IMMUTABLE)
+        assert choose_strategy(t, TransferMode.SBR) is MigrationStrategy.REPLICATE
+        assert choose_strategy(t, TransferMode.SBK) is MigrationStrategy.REPLICATE
+
+    def test_mutable_sbk_markers(self):
+        t = OperatorTraits("groupby", StateMutability.MUTABLE,
+                           mergeable_state=True, blocking=True)
+        assert choose_strategy(t, TransferMode.SBK) is MigrationStrategy.MARKERS
+
+    def test_mutable_sbr_scattered_needs_merge_and_blocking(self):
+        ok = OperatorTraits("sort", StateMutability.MUTABLE,
+                            mergeable_state=True, blocking=True)
+        bad = OperatorTraits("agg-stream", StateMutability.MUTABLE,
+                             mergeable_state=True, blocking=False)
+        assert choose_strategy(ok, TransferMode.SBR) is MigrationStrategy.SCATTERED
+        assert choose_strategy(bad, TransferMode.SBR) is None
+        assert can_scatter(ok) and not can_scatter(bad)
+
+    def test_order_sensitivity_forces_sbk(self):
+        t = OperatorTraits("probe", StateMutability.IMMUTABLE,
+                           order_sensitive_downstream=True)
+        assert choose_mode(t, TransferMode.SBR) is TransferMode.SBK

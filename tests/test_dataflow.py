@@ -1,0 +1,206 @@
+"""Integration tests: the pipelined engine + Reshape + baselines (W1-W4).
+
+The central invariant: *mitigation never changes results* — only when
+(and how representatively) they appear. Every workflow's final output must
+equal the unmitigated ground truth under every strategy.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ReshapeConfig, TransferMode
+from repro.dataflow import (
+    build_w1, build_w2, build_w3, build_w4,
+)
+from repro.dataflow import datasets
+from repro.dataflow.checkpoint import CheckpointCoordinator, restore, snapshot
+from repro.dataflow.metrics import PairLoadSampler, area_under, ratio_series
+
+STRATEGIES = ["none", "reshape", "flux", "flowjoin"]
+
+
+# --------------------------------------------------------------------- #
+# W1: result invariance + representativeness ordering
+# --------------------------------------------------------------------- #
+class TestW1:
+    @pytest.fixture(scope="class")
+    def runs(self):
+        out = {}
+        for s in STRATEGIES:
+            wf = build_w1(strategy=s, scale=0.05, num_workers=48,
+                          service_rate=4)
+            wf.run()
+            out[s] = wf
+        return out
+
+    def test_results_invariant_under_mitigation(self, runs):
+        counts = datasets.tweet_counts(0.05)
+        for s, wf in runs.items():
+            assert np.array_equal(wf.sink.counts, counts), s
+
+    def test_reshape_reduces_execution_time(self, runs):
+        assert runs["reshape"].engine.tick < 0.75 * runs["none"].engine.tick
+
+    def test_flux_cannot_help_single_hot_key(self, runs):
+        # Flux moves only the small co-resident key: runtime ~ unmitigated
+        assert runs["flux"].engine.tick > 0.9 * runs["none"].engine.tick
+
+    def test_representativeness_ordering(self, runs):
+        """AUC of |observed - actual| ratio: reshape < flowjoin, none."""
+        aucs = {}
+        for s, wf in runs.items():
+            m = wf.meta
+            rs = ratio_series(wf.sink.series, m["ca"], m["az"],
+                              m["actual_ca_az"])
+            aucs[s] = area_under(rs)
+        assert aucs["reshape"] < aucs["flowjoin"]
+        assert aucs["reshape"] < aucs["none"]
+        assert aucs["reshape"] < aucs["flux"]
+
+    def test_load_balancing_ratio(self, runs):
+        wf = runs["reshape"]
+        join = wf.monitored[0]
+        rec = join.received_totals()
+        s, h = wf.meta["ca_worker"], wf.meta["az_worker"]
+        ratio = min(rec[s], rec[h]) / max(rec[s], rec[h])
+        assert ratio > 0.8     # paper: ~0.92
+
+    def test_mitigation_events_logged(self, runs):
+        ev = runs["reshape"].controllers[0].events
+        kinds = {e.kind for e in ev}
+        assert "detect" in kinds and "phase1" in kinds and "phase2" in kinds
+
+
+# --------------------------------------------------------------------- #
+# W2: groupby + two joins; scattered state on mutable ops
+# --------------------------------------------------------------------- #
+class TestW2:
+    def test_groupby_results_exact_under_reshape(self):
+        wf = build_w2(strategy="reshape", n_tuples=4000, num_workers=8,
+                      service_rate=4)
+        wf.run()
+        _, items, _, _ = datasets.dsb_sales(4000)
+        expect = np.bincount(items, minlength=datasets.DsbSpec().num_items)
+        grp = wf.meta["groupby"]
+        got = np.zeros_like(expect)
+        for w in grp.workers:
+            for k, (c, s) in w.state.items():
+                got[k] += c
+        assert np.array_equal(got, expect)
+        # scattered buffers fully merged at END
+        assert all(not w.scattered for w in grp.workers)
+
+
+# --------------------------------------------------------------------- #
+# W3: sort with SBR scattered state (paper Fig. 11) + SBK ordering
+# --------------------------------------------------------------------- #
+class TestW3:
+    def test_sort_globally_correct_under_reshape(self):
+        wf = build_w3(strategy="reshape", n_tuples=4000, num_workers=8,
+                      service_rate=6)
+        wf.run()
+        got = wf.monitored[0].sorted_output()
+        np.testing.assert_allclose(got, np.sort(wf.meta["prices"]))
+
+    def test_sort_correct_under_flux_sbk(self):
+        wf = build_w3(strategy="flux", n_tuples=4000, num_workers=8,
+                      service_rate=6)
+        wf.run()
+        got = wf.monitored[0].sorted_output()
+        np.testing.assert_allclose(got, np.sort(wf.meta["prices"]))
+
+    def test_reshape_balances_sort_workers(self):
+        base = build_w3(strategy="none", n_tuples=6000, num_workers=10)
+        base.run()
+        wf = build_w3(strategy="reshape", n_tuples=6000, num_workers=10)
+        wf.run()
+        def spread(w):
+            r = w.monitored[0].received_totals()
+            return r.max() / max(r.mean(), 1)
+        assert spread(wf) < spread(base)
+
+
+# --------------------------------------------------------------------- #
+# W4: changing input distribution (§7.8)
+# --------------------------------------------------------------------- #
+class TestW4:
+    def test_reshape_adapts_to_distribution_change(self):
+        wf = build_w4(strategy="reshape", n_tuples=20_000, num_workers=20,
+                      cfg=ReshapeConfig(tau=500.0))
+        wf.run()
+        keys, _ = datasets.synthetic_changing(20_000, 42)
+        expect = np.bincount(keys, minlength=42)
+        assert np.array_equal(wf.sink.counts, expect)
+        # at least two mitigation iterations (initial + after the change)
+        assert wf.controllers[0].iterations_total >= 2
+
+    def test_flowjoin_cannot_adapt(self):
+        wf = build_w4(strategy="flowjoin", n_tuples=20_000, num_workers=20)
+        wf.run()
+        # one-shot: exactly the initial split events, nothing after
+        ev = wf.controllers[0].events
+        assert len({e.tick for e in ev}) <= 1
+
+
+# --------------------------------------------------------------------- #
+# Control-message latency (§7.5)
+# --------------------------------------------------------------------- #
+def test_control_delay_degrades_balancing():
+    ratios = {}
+    for delay in (0, 30):
+        cfg = ReshapeConfig(control_delay_ticks=delay)
+        wf = build_w1(strategy="reshape", scale=0.05, num_workers=48,
+                      service_rate=4, cfg=cfg)
+        sampler = PairLoadSampler(wf.meta["ca_worker"], wf.meta["az_worker"])
+        join = wf.monitored[0]
+        eng = wf.engine
+        while not eng.done() and eng.tick < 10_000:
+            eng.run_tick()
+            if eng.tick % 5 == 0:
+                sampler.sample(join.received_totals())
+        ratios[delay] = sampler.average
+    assert ratios[0] > ratios[30]
+
+
+# --------------------------------------------------------------------- #
+# Fault tolerance (§2.2): checkpoint + recovery reproduces results
+# --------------------------------------------------------------------- #
+class TestFaultTolerance:
+    def test_recovery_reproduces_final_results(self):
+        ref = build_w1(strategy="reshape", scale=0.03)
+        ref.run()
+        wf = build_w1(strategy="reshape", scale=0.03)
+        coord = CheckpointCoordinator(wf.engine, every_ticks=20)
+        coord.run(fail_at=[45, 90])
+        assert coord.recoveries == 2
+        assert np.array_equal(wf.sink.counts, ref.sink.counts)
+        assert wf.engine.tick == ref.engine.tick
+
+    def test_checkpoint_during_migration_resumes_phase_machine(self):
+        wf = build_w1(strategy="reshape", scale=0.03)
+        eng = wf.engine
+        ctrl = wf.controllers[0]
+        # run until a mitigation is active
+        while not ctrl.mitigations and eng.tick < 500:
+            eng.run_tick()
+        assert ctrl.mitigations
+        snap = snapshot(eng)
+        phases = {s: m.phase for s, m in ctrl.mitigations.items()}
+        for _ in range(10):
+            eng.run_tick()
+        restore(eng, snap)
+        assert {s: m.phase for s, m in ctrl.mitigations.items()} == phases
+        eng.run(100_000)
+        assert np.array_equal(wf.sink.counts, datasets.tweet_counts(0.03))
+
+
+# --------------------------------------------------------------------- #
+# Metric-collection accounting (§7.9)
+# --------------------------------------------------------------------- #
+def test_metric_messages_scale_with_period():
+    msgs = {}
+    for period in (1, 4):
+        cfg = ReshapeConfig(metric_period=period)
+        wf = build_w1(strategy="reshape", scale=0.02, cfg=cfg)
+        wf.run()
+        msgs[period] = wf.controllers[0].metric_messages()
+    assert msgs[1] > 3 * msgs[4]

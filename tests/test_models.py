@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs, plus decode-vs-forward consistency.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke, input_specs
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+         "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(KEY, (B, cfg.enc_seq, cfg.d_model),
+                                        jnp.bfloat16)
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(KEY, (B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, KEY)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    logits, stats = forward(params, cfg, batch, remat=False)
+    n_text = batch["tokens"].shape[1]
+    expected_seq = {
+        "vlm": cfg.n_patches + n_text,
+    }.get(cfg.family, S)
+    assert logits.shape == (B, expected_seq, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, _ = loss_fn(params, cfg, batch, remat=False)
+    assert bool(jnp.isfinite(loss))
+    # one gradient step exists and is finite
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch, remat=False)[0])(params)
+    gn = sum(float(jnp.abs(x.astype(jnp.float32)).sum())
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, KEY)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    cache = init_cache(cfg, B, S + 8)
+    logits, cache = prefill(params, cfg, batch, cache)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits2, cache = decode_step(params, cfg, tok, cache,
+                                 jnp.asarray(S, jnp.int32))
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "yi-6b", "olmoe-1b-7b",
+                                  "deepseek-v2-lite-16b", "rwkv6-1.6b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(S-1) + decode(1 token) == forward(S) at the last position.
+
+    MoE archs use a drop-free capacity factor so the train-forward path
+    sees the same token set the (always drop-free) serve path does."""
+    import dataclasses
+    cfg = get_smoke(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    params = init_params(cfg, KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full, _ = forward(params, cfg, {"tokens": toks}, remat=False)
+    cache = init_cache(cfg, B, S + 4)
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :S - 1]}, cache)
+    last, _ = decode_step(params, cfg, toks[:, S - 1:S], cache,
+                          jnp.asarray(S - 1, jnp.int32))
+    err = jnp.abs(full[:, -1].astype(jnp.float32) -
+                  last[:, 0].astype(jnp.float32)).max()
+    # ssm recurrences accumulate fp divergence across the two paths; MLA
+    # decode reads the bf16 latent cache through the absorbed-weight path
+    # (forward expands the full-precision latent) — ~1e-2 relative.
+    tol = {"ssm": 2e-2, "hybrid": 2e-2}.get(cfg.family,
+                                            5e-2 if cfg.attn == "mla" else 2e-3)
+    assert float(err) <= tol, float(err)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_published_config(arch):
+    """The full config matches the assignment row exactly."""
+    cfg = get_config(arch)
+    rows = {
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }
+    L, d, h, kv, ff, v = rows[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v)
+    if arch == "olmoe-1b-7b":
+        assert (cfg.n_experts, cfg.top_k) == (64, 8)
+    if arch == "deepseek-v2-lite-16b":
+        assert (cfg.n_experts, cfg.top_k, cfg.n_shared, cfg.kv_lora) == \
+            (64, 6, 2, 512)
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16
+    if arch == "rwkv6-1.6b":
+        assert cfg.attn == "none"
+
+
+def test_shape_registry_and_skips():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["long_500k"].global_batch == 1
+    sub_quadratic = {"rwkv6-1.6b", "hymba-1.5b"}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if arch in sub_quadratic:
+            assert "long_500k" not in cfg.skip_shapes
+        else:
+            assert "long_500k" in cfg.skip_shapes
+
+
+def test_input_specs_no_allocation():
+    for arch in ("granite-8b", "whisper-medium", "internvl2-2b", "hymba-1.5b"):
+        cfg = get_config(arch)
+        for shape in cfg.cells():
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(
+                    specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_plausible():
+    approx = {
+        "olmoe-1b-7b": 6.9e9, "deepseek-v2-lite-16b": 15e9,
+        "minicpm3-4b": 4e9, "granite-8b": 8e9, "llama3.2-3b": 3.2e9,
+        "yi-6b": 6e9, "rwkv6-1.6b": 1.6e9, "hymba-1.5b": 1.5e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.55 * want < got < 1.6 * want, (arch, got, want)

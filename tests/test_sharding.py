@@ -1,0 +1,142 @@
+"""Sharding-rule structure tests (no multi-device lowering here — that is
+the dry-run's job; these verify pspec pytrees match param pytrees)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke
+from repro.dist import sharding
+from repro.models import init_params
+from repro.train import optimizer
+
+
+def _single_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_pspecs_match_param_tree(arch):
+    """Spec pytree must zip exactly with the param pytree (full config
+    shapes via eval_shape — no allocation)."""
+    cfg = get_config(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = sharding.param_pspecs(cfg, mesh)
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    # tree_map raises on structure mismatch
+    merged = jax.tree.map(lambda sds, sp: (sds.shape, sp), shapes, specs,
+                          is_leaf=lambda x: isinstance(x, (P,)) or hasattr(x, "shape"))
+    assert jax.tree_util.tree_structure(shapes) is not None
+    for sds, sp in jax.tree.leaves(merged, is_leaf=lambda x: isinstance(x, tuple)
+                                   and len(x) == 2 and isinstance(x[1], P)):
+        pass  # structure zip succeeded
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "olmoe-1b-7b",
+                                  "deepseek-v2-lite-16b", "hymba-1.5b"])
+def test_sharded_dims_divisible(arch):
+    """Every sharded dim must divide by the production mesh axis size."""
+    cfg = get_config(arch)
+    mesh_shape = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        shape = mesh_shape
+    specs = sharding.param_pspecs(cfg, FakeMesh())
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+    def check(sds, spec):
+        if not isinstance(spec, P):
+            return
+        for dim, ax in zip(sds.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([mesh_shape[a] for a in axes]))
+            assert dim % total == 0, (arch, sds.shape, spec)
+
+    jax.tree.map(check, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_zero1_opt_specs_add_data_axis():
+    cfg = get_config("granite-8b")
+    mesh_shape = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        shape = mesh_shape
+    pspec = sharding.param_pspecs(cfg, FakeMesh())
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    ospec = sharding.opt_pspecs(pspec, shapes, FakeMesh())
+    # embed [vocab, d]: params ("model", None) -> opt ("model", "data")
+    assert tuple(ospec["embed"]) == ("model", "data")
+
+
+def test_cache_pspecs_structure_matches_cache():
+    from repro.models import init_cache
+    for arch in ("yi-6b", "deepseek-v2-lite-16b", "rwkv6-1.6b", "hymba-1.5b"):
+        cfg = get_config(arch)
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+        spec = sharding.cache_pspecs(cfg, SHAPES["decode_32k"], FakeMesh())
+        sds = jax.eval_shape(lambda: init_cache(cfg, 128, 1024))
+        jax.tree.map(lambda a, b: None, sds, spec,
+                     is_leaf=lambda x: isinstance(x, P))  # structure zip
+
+
+def test_batch_pspecs_shard_batch_over_dp():
+    cfg = get_config("granite-8b")
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    b = sharding.batch_pspecs(cfg, SHAPES["train_4k"], FakeMesh())
+    assert b["tokens"] == P(("data",), None)
+
+    class PodMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    b = sharding.batch_pspecs(cfg, SHAPES["train_4k"], PodMesh())
+    assert b["tokens"] == P(("pod", "data"), None)
+
+
+def test_hlo_analyzer_counts_trip_counts():
+    """The roofline analyzer multiplies while bodies by known_trip_count."""
+    from repro.launch.hlo_analysis import analyze_text
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %a = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] constant(1)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %x)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    res = analyze_text(hlo)
+    # dot: 2*8*8*8 = 1024 flops x 10 trips
+    assert res["flops"] == pytest.approx(10 * 1024)
+
+
+def test_all_cells_enumeration():
+    from repro.configs import all_cells
+    cells = all_cells()
+    # 10 archs x 4 shapes - 8 long_500k skips = 32
+    assert len(cells) == 32
+    assert ("rwkv6-1.6b", "long_500k") in cells
+    assert ("granite-8b", "long_500k") not in cells
