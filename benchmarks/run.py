@@ -13,6 +13,8 @@ import time
 import traceback
 
 BENCHES = [
+    ("engine_throughput", "bench_engine_throughput",
+     "exchange data plane: tuples/sec, reference vs numpy vs pallas"),
     ("user_results", "bench_user_results", "§7.2 Fig16/17 result ratios"),
     ("first_phase", "bench_first_phase", "§7.3 Fig18/19 first phase"),
     ("heavy_hitter", "bench_heavy_hitter", "§7.4 Fig20 heavy hitters"),

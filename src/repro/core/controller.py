@@ -92,6 +92,7 @@ class _Mitigation:
     migration_end: float = 0.0
     iteration: int = 1
     phase1_keys: Tuple[int, ...] = ()
+    calm_rounds: int = 0    # consecutive phase-2 rounds with gap < tau
 
 
 @dataclasses.dataclass
@@ -203,26 +204,41 @@ class ReshapeController:
                 q_hmax = max(phi[h] for h in m.helpers)
                 s_ahead = q_s >= self.cfg.eta and q_s - q_h >= self.tau
                 h_ahead = q_hmax >= self.cfg.eta and q_hmax - q_s >= self.tau
-                if s_ahead or h_ahead:
-                    eps = self.tracker.stderr_pair(m.skewed, m.helpers[0])
-                    if (
-                        self.cfg.adaptive_tau
-                        and np.isfinite(eps)
-                        and eps > self.cfg.eps_upper
-                        and self.tau_adjustments < self.cfg.max_tau_adjustments
-                    ):
-                        new_tau = self.tau + self.cfg.tau_increase
-                        self._log(tick, "tau_increase", m.skewed, m.helpers,
-                                  old=self.tau, new=new_tau)
-                        self.tau = new_tau
-                        self.tau_adjustments += 1
-                    m.iteration += 1
-                    self.iterations_total += 1
-                    self.tracker.reset_samples([m.skewed, *m.helpers])
-                    if s_ahead:
-                        self._start_phase1(tick, m)
-                    else:
-                        self._start_phase2(tick, m)
+                if not (s_ahead or h_ahead):
+                    # Calm round: the pair's gap stayed under tau.  After a
+                    # full window of calm the mitigation is complete — the
+                    # phase-2 split keeps routing, but the state machine
+                    # retires and frees (S, helpers) for new detections.
+                    m.calm_rounds += 1
+                    window = (self.cfg.retire_after
+                              if self.cfg.retire_after is not None
+                              else self.cfg.sample_window)
+                    if window > 0 and m.calm_rounds >= window:
+                        done.append(s)
+                        self._log(tick, "retire", m.skewed, m.helpers,
+                                  iteration=m.iteration,
+                                  calm_rounds=m.calm_rounds)
+                    continue
+                m.calm_rounds = 0
+                eps = self.tracker.stderr_pair(m.skewed, m.helpers[0])
+                if (
+                    self.cfg.adaptive_tau
+                    and np.isfinite(eps)
+                    and eps > self.cfg.eps_upper
+                    and self.tau_adjustments < self.cfg.max_tau_adjustments
+                ):
+                    new_tau = self.tau + self.cfg.tau_increase
+                    self._log(tick, "tau_increase", m.skewed, m.helpers,
+                              old=self.tau, new=new_tau)
+                    self.tau = new_tau
+                    self.tau_adjustments += 1
+                m.iteration += 1
+                self.iterations_total += 1
+                self.tracker.reset_samples([m.skewed, *m.helpers])
+                if s_ahead:
+                    self._start_phase1(tick, m)
+                else:
+                    self._start_phase2(tick, m)
         for s in done:
             del self.mitigations[s]
 

@@ -7,14 +7,52 @@ without recompilation (DESIGN.md §3).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-_GOLDEN = 0.6180339887498949
+# The canonical fixed-point rule's constants live in repro.core.partitioner
+# (pure numpy, safely importable here); these are the single source of
+# truth for host *and* device thresholds.
+from .partitioner import GOLDEN_FIX_I32
+
+_U24_SCALE = float(1.0 / (1 << 24))
+
+
+def ld_thresholds(counters: jax.Array) -> jax.Array:
+    """Fixed-point Weyl threshold u in [0, 1) per record, exact in float32.
+
+    Bit-identical to :func:`repro.core.partitioner.ld_thresholds`: 32-bit
+    wrapping integer arithmetic, top 24 bits scaled to float32.
+    """
+    bits = (counters.astype(jnp.int32) + 1) * jnp.int32(GOLDEN_FIX_I32)
+    top = jax.lax.shift_right_logical(bits, 8)
+    return top.astype(jnp.float32) * jnp.float32(_U24_SCALE)
+
+
+def saturated_cdf32(weights: jax.Array) -> jax.Array:
+    """jnp twin of :func:`repro.core.partitioner.routing_cdf32`.
+
+    Float32 row-CDF with entries saturated to 1.0 from each row's last
+    positive-weight column onward, so ``u < 1`` can never route a record
+    onto a zero-weight worker even when the float32 row total rounds
+    below 1.  Prefer passing the host-computed ``RoutingTable.cdf32``
+    where bit-exact host/device agreement matters (XLA may reassociate
+    the cumsum on accelerators).
+    """
+    num_workers = weights.shape[1]
+    cdf = jnp.cumsum(weights.astype(jnp.float32), axis=1)
+    last = (num_workers - 1
+            - jnp.argmax((weights > 0)[:, ::-1], axis=1))
+    cols = jnp.arange(num_workers)
+    return jnp.where(cols[None, :] >= last[:, None],
+                     jnp.float32(1.0), cdf)
 
 
 def route_records(
-    weights: jax.Array, keys: jax.Array, counters: jax.Array
+    weights: jax.Array, keys: jax.Array, counters: jax.Array,
+    cdf: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Destination worker per record via inverse-CDF low-discrepancy routing.
 
@@ -22,16 +60,24 @@ def route_records(
       weights: [num_keys, num_workers] row-stochastic routing table.
       keys: [n] int32/64 record keys.
       counters: [n] per-key running record index (any monotone counter).
+      cdf: optional [num_keys, num_workers] float32 row-CDF
+        (``RoutingTable.cdf32``); pass it for bit-exact agreement with the
+        host on accelerators, else it is derived from ``weights`` here.
 
     Returns: [n] int32 destination worker ids.
 
-    A record of key k with counter c lands at the worker whose CDF bucket
-    contains frac((c+1) * golden) -- deterministic, uniform over any window,
-    and exactly matching RoutingTable.route_lowdiscrepancy.
+    A record of key k with counter c lands at the worker whose float32 CDF
+    bucket contains the fixed-point Weyl threshold u(c) -- deterministic,
+    uniform over any window, and exactly matching
+    ``RoutingTable.route_lowdiscrepancy`` (see the canonical-rule note in
+    repro.core.partitioner).
     """
-    u = jnp.mod((counters.astype(jnp.float32) + 1.0) * _GOLDEN, 1.0)
-    cdf = jnp.cumsum(weights[keys], axis=1)
-    return jnp.sum(u[:, None] >= cdf, axis=1).astype(jnp.int32)
+    u = ld_thresholds(counters)
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    dest = jnp.sum(u[:, None] >= cdf.astype(jnp.float32)[keys],
+                   axis=1).astype(jnp.int32)
+    return jnp.minimum(dest, weights.shape[1] - 1)
 
 
 def per_key_counters(keys: jax.Array, num_keys: int) -> jax.Array:

@@ -15,8 +15,26 @@ controller changes the partitioning logic by swapping a small array between
 micro-batch steps -- the JAX analogue of Amber/Chi control messages (see
 DESIGN.md §3).  Record-level splitting is deterministic: the host path uses
 deficit round-robin (exact conservation: over n records of a key, worker w
-receives ``round(n*w[k,w])`` within ±1), and the jitted path uses inverse-CDF
-routing on a per-record low-discrepancy sequence.
+receives ``round(n*w[k,w])`` within ±1), and the chunked/jitted path uses
+inverse-CDF routing on a per-record low-discrepancy sequence.
+
+Canonical inverse-CDF rule
+--------------------------
+Every chunked routing path -- ``route_chunk``/``route_lowdiscrepancy`` here,
+:func:`repro.core.ops.route_records` (the jnp twin) and the Pallas exchange
+kernel :func:`repro.kernels.partition.partition` -- evaluates the *same*
+bit-exact rule, so host and device can never disagree on a destination:
+
+  u(c)  = ((c + 1) * GOLDEN_FIX mod 2^32) >> 8, scaled to float32 in [0, 1)
+  dest  = #{w : u >= cdf32[k, w]}, clipped to num_workers - 1
+
+``GOLDEN_FIX = floor(frac(phi) * 2^32)`` is the golden ratio in 32-bit
+fixed point (Knuth's multiplicative-hash constant), so the sequence is the
+classic Weyl low-discrepancy sequence computed in exact integer arithmetic;
+the top 24 bits convert to float32 losslessly.  ``cdf32`` is the row-wise
+float32 cumulative sum of the routing weights, computed once per table
+version on the host and shared with the device kernel.  The comparison is
+``u >= cdf`` everywhere (no epsilon slack on either side).
 """
 from __future__ import annotations
 
@@ -24,7 +42,59 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-_GOLDEN = 0.6180339887498949  # frac(phi); low-discrepancy increment
+#: frac(phi) in 32-bit fixed point: floor(0.6180339887 * 2^32).
+GOLDEN_FIX = np.uint32(2654435769)
+
+#: GOLDEN_FIX reinterpreted as int32 (two's complement) for device code
+#: whose multiplies wrap mod 2^32 on signed 32-bit lanes.
+GOLDEN_FIX_I32 = int(np.uint32(2654435769).astype(np.int32))
+
+_U24_SCALE = np.float32(1.0 / (1 << 24))
+
+
+def ld_thresholds(counters: np.ndarray) -> np.ndarray:
+    """Low-discrepancy threshold u in [0, 1) per record, exact in float32.
+
+    ``counters`` is any per-key monotone record index (int-like).  The
+    computation is pure 32-bit integer arithmetic (wrapping multiply by the
+    fixed-point golden ratio), so numpy, XLA and the Pallas kernel produce
+    identical bits.
+    """
+    c = np.asarray(counters).astype(np.uint32, copy=False)
+    bits = (c + np.uint32(1)) * GOLDEN_FIX          # wraps mod 2^32
+    return (bits >> np.uint32(8)).astype(np.float32) * _U24_SCALE
+
+
+def routing_cdf32(weights: np.ndarray) -> np.ndarray:
+    """Canonical float32 row-CDF of a routing-weight matrix.
+
+    Computed on the host with a sequential cumsum; device kernels take this
+    array as an input instead of re-deriving it so rounding is identical.
+
+    Entries from each row's last positive-weight column onward are
+    saturated to 1.0: a float32 row total can round *below* 1 (e.g.
+    0.99999994 == the largest threshold ``ld_thresholds`` can emit), and
+    without saturation a record whose u reaches the total would count past
+    the last live worker and land on a zero-weight one.  With saturation,
+    ``u < 1`` guarantees destinations only ever carry positive routing
+    weight (zero-weight workers *between* live ones are already
+    unreachable: their CDF entry equals the previous one bit-for-bit, so
+    the >= count always skips them).
+    """
+    w = np.asarray(weights)
+    cdf = np.cumsum(w.astype(np.float32), axis=1, dtype=np.float32)
+    num_workers = w.shape[1]
+    last = num_workers - 1 - np.argmax((w > 0)[:, ::-1], axis=1)
+    cols = np.arange(num_workers)
+    cdf[cols[None, :] >= last[:, None]] = np.float32(1.0)
+    return cdf
+
+
+def inverse_cdf_destinations(u: np.ndarray, cdf_rows: np.ndarray,
+                             num_workers: int) -> np.ndarray:
+    """dest = #{w : u >= cdf[w]} clipped to the last worker."""
+    dest = (u[:, None] >= cdf_rows).sum(axis=1)
+    return np.minimum(dest, num_workers - 1).astype(np.int64)
 
 
 class RoutingTable:
@@ -50,6 +120,14 @@ class RoutingTable:
         self._credit = np.zeros((num_keys, num_workers), dtype=np.float64)
         # Per-key record counters for the vectorized low-discrepancy path.
         self._count = np.zeros(num_keys, dtype=np.int64)
+        # Derived routing structures (float32 row-CDF shared with device
+        # kernels, one-hot primaries, split-key mask); recomputed lazily
+        # whenever `version` moves.
+        self._cdf32: Optional[np.ndarray] = None
+        self._primary: Optional[np.ndarray] = None
+        self._is_split: Optional[np.ndarray] = None
+        self._any_split = False
+        self._derived_version = -1
         # Optional listener(keys, old_rows, new_rows) fired on any rewrite.
         # Engines use it to synchronize state migration with the partition
         # change (the "markers" strategy of §5.3: both happen at the same
@@ -158,6 +236,72 @@ class RoutingTable:
     # ------------------------------------------------------------------ #
     # Routing application                                                 #
     # ------------------------------------------------------------------ #
+    def _refresh_derived(self) -> None:
+        if self._derived_version != self.version:
+            w = self.weights
+            self._cdf32 = routing_cdf32(w)
+            self._primary = w.argmax(axis=1).astype(np.int64)
+            self._is_split = np.count_nonzero(w > 0, axis=1) > 1
+            self._any_split = bool(self._is_split.any())
+            self._derived_version = self.version
+
+    @property
+    def cdf32(self) -> np.ndarray:
+        """Float32 row-CDF of ``weights``, cached per table version."""
+        self._refresh_derived()
+        return self._cdf32
+
+    def invalidate_cache(self) -> None:
+        """Drop derived caches (call after writing weights/version directly,
+        e.g. checkpoint restore)."""
+        self._cdf32 = None
+        self._primary = None
+        self._is_split = None
+        self._any_split = False
+        self._derived_version = -1
+
+    def advance_counters(self, keys: np.ndarray) -> np.ndarray:
+        """Per-record running per-key counters for a chunk; advances the
+        persistent per-key counts.
+
+        Stateless routing (`route_lowdiscrepancy`, the jnp twin, the Pallas
+        kernel) consumes the returned counters, so an exchange backend owns
+        exactly one stateful step: this one.  Only *split* keys consume the
+        low-discrepancy sequence — a one-hot key's destination is
+        counter-independent under the canonical rule, so its counter is
+        left untouched (and the returned entry is 0) until a rewrite
+        actually splits it.  Every routing path shares this policy, which
+        keeps destinations identical across backends and the reference
+        plane.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        counters = np.zeros(keys.size, dtype=np.int64)
+        if keys.size == 0:
+            return counters
+        self._refresh_derived()
+        if not self._any_split:
+            return counters
+        split = self._is_split[keys]
+        idx = np.flatnonzero(split)
+        if idx.size == 0:
+            return counters
+        sk = keys[idx]
+        # Running per-key occurrence index within this chunk.
+        order = np.argsort(sk, kind="stable")
+        sorted_keys = sk[order]
+        n = sorted_keys.size
+        starts_mask = np.empty(n, dtype=bool)
+        starts_mask[0] = True
+        np.not_equal(sorted_keys[1:], sorted_keys[:-1], out=starts_mask[1:])
+        starts = np.flatnonzero(starts_mask)
+        seg_lens = np.diff(np.append(starts, n))
+        local_idx = np.arange(n) - np.repeat(starts, seg_lens)
+        occ = np.empty(n, dtype=np.int64)
+        occ[order] = local_idx
+        counters[idx] = self._count[sk] + occ
+        self._count[sorted_keys[starts]] += seg_lens
+        return counters
+
     def route(self, keys: np.ndarray) -> np.ndarray:
         """Exact host-side routing of a chunk of records (deficit RR).
 
@@ -180,42 +324,37 @@ class RoutingTable:
     def route_chunk(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized routing of a chunk (the engine's hot path).
 
-        Uses persistent per-key counters + the golden-ratio low-discrepancy
-        sequence, so a key split r/(1-r) deviates from the ideal allocation
-        by O(log n) over any window while staying fully deterministic.
-        One-hot rows short-circuit to a table lookup.
+        Uses persistent per-key counters + the fixed-point golden-ratio
+        low-discrepancy sequence, so a key split r/(1-r) deviates from the
+        ideal allocation by O(log n) over any window while staying fully
+        deterministic and bit-identical to the device kernel.
         """
         keys = np.asarray(keys, dtype=np.int64)
         if keys.size == 0:
             return np.zeros(0, dtype=np.int64)
-        # Running per-key occurrence index within this chunk.
-        order = np.argsort(keys, kind="stable")
-        sorted_keys = keys[order]
-        starts = np.r_[0, np.nonzero(np.diff(sorted_keys))[0] + 1]
-        local_idx = np.arange(keys.size) - np.repeat(starts, np.diff(np.r_[starts, keys.size]))
-        occ = np.empty(keys.size, dtype=np.int64)
-        occ[order] = local_idx
-        counters = self._count[keys] + occ
-        # Advance persistent counters.
-        uniq, counts = sorted_keys[starts], np.diff(np.r_[starts, keys.size])
-        self._count[uniq] += counts
-        u = np.mod((counters.astype(np.float64) + 1.0) * _GOLDEN, 1.0)
-        cdf = np.cumsum(self.weights[keys], axis=1)
-        dest = (u[:, None] >= cdf - 1e-12).sum(axis=1)
-        return np.minimum(dest, self.num_workers - 1).astype(np.int64)
+        return self.route_lowdiscrepancy(keys, self.advance_counters(keys))
 
     def route_lowdiscrepancy(self, keys: np.ndarray, counters: np.ndarray) -> np.ndarray:
-        """Stateless routing: inverse CDF at a golden-ratio sequence point.
+        """Stateless routing: inverse CDF at a fixed-point golden-ratio
+        sequence point (the canonical rule, see module docstring).
 
         ``counters[i]`` is the running per-key record index of record *i*
         (any monotone per-key counter works).  This form is jittable --
-        :func:`repro.core.ops.route_records` is the jnp twin -- and is what
-        the MoE balancer uses on device.
+        :func:`repro.core.ops.route_records` is the jnp twin, and
+        :func:`repro.kernels.partition.partition` the Pallas kernel; all
+        three produce identical destinations for identical inputs.
         """
         keys = np.asarray(keys, dtype=np.int64)
-        u = np.mod((np.asarray(counters, dtype=np.float64) + 1.0) * _GOLDEN, 1.0)
-        cdf = np.cumsum(self.weights[keys], axis=1)
-        return (u[:, None] >= cdf).sum(axis=1).astype(np.int64)
+        self._refresh_derived()
+        dest = self._primary[keys]
+        if self._any_split:
+            m = self._is_split[keys]
+            idx = np.flatnonzero(m)
+            if idx.size:
+                u = ld_thresholds(np.asarray(counters)[idx])
+                dest[idx] = inverse_cdf_destinations(
+                    u, self._cdf32[keys[idx]], self.num_workers)
+        return dest
 
     # ------------------------------------------------------------------ #
     # Introspection                                                       #

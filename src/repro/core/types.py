@@ -87,6 +87,12 @@ class ReshapeConfig:
     migration_time_guard: bool = True
     # Modeled migration throughput (state units per tick) for §6.1/§6.2.
     migration_rate: float = float("inf")
+    # Retire a phase-2 mitigation after the pair's workload gap has stayed
+    # under tau for this many consecutive metric rounds, freeing the
+    # (skewed, helpers) workers for future detections.  None = one full
+    # sample window; 0 disables retirement (mitigations stay active until
+    # the operator finishes).
+    retire_after: Optional[int] = None
     # Experiment harness: force the helper of a given skewed worker
     # (paper §7.2 pins worker 4 / worker 17 as CA's helper).
     pinned_helpers: dict = dataclasses.field(default_factory=dict)

@@ -2,9 +2,13 @@
 
 Layout:
   tuples.py      columnar chunks + worker queues (phi metric source)
+  exchange.py    columnar exchange: chunk routing + scatter per edge,
+                 pluggable numpy/Pallas partition backend
+  state.py       array-backed keyed-state containers (AggStore/ScopeRows)
   operators.py   Filter/Project/HashJoin/GroupBy/RangeSort/Sink workers
   engine.py      tick-based pipelined executor, edges with RoutingTables,
                  state-migration synchronization, controller attachment
+  reference.py   pre-refactor tuple-at-a-time data plane (testing oracle)
   baselines.py   Flux and Flow-Join (paper §7.1 baselines)
   datasets.py    synthetic tweet/DSB/TPC-H/changing-distribution streams
   workflows.py   the paper's W1-W4 experiment graphs
@@ -12,6 +16,14 @@ Layout:
   checkpoint.py  aligned snapshots + recovery (§2.2 fault tolerance)
 """
 from .engine import Edge, Engine, EngineAdapter, Source
+from .exchange import (
+    Exchange,
+    NumpyPartitionBackend,
+    PallasPartitionBackend,
+    PartitionBackend,
+    get_backend,
+)
+from .state import AggStore, ScopeRows
 from .operators import (
     Filter,
     GroupByAgg,
@@ -27,10 +39,17 @@ from .baselines import FlowJoinController, FluxController
 from .workflows import Workflow, build_w1, build_w2, build_w3, build_w4
 
 __all__ = [
+    "AggStore",
     "Edge",
     "Engine",
     "EngineAdapter",
+    "Exchange",
+    "NumpyPartitionBackend",
+    "PallasPartitionBackend",
+    "PartitionBackend",
+    "ScopeRows",
     "Source",
+    "get_backend",
     "Filter",
     "GroupByAgg",
     "HashJoinBuild",

@@ -42,6 +42,7 @@ def _restore_routing(rt, s: Dict) -> None:
     rt.version = s["version"]
     rt._credit[:] = s["credit"]
     rt._count[:] = s["count"]
+    rt.invalidate_cache()    # weights/version written directly
 
 
 def _snap_controller(ctrl) -> Dict:
@@ -94,6 +95,7 @@ def snapshot(engine: Engine) -> Dict:
     snap["sources"] = [dict(pos=s.pos, finished=s.finished) for s in engine.sources]
     snap["edges"] = [
         dict(routing=_snap_routing(e.routing), tuples_sent=e.tuples_sent,
+             sent_per_worker=e.sent_per_worker.copy(),
              units_moved=e.units_moved, strategy=e.strategy)
         for e in engine.edges
     ]
@@ -138,6 +140,7 @@ def restore(engine: Engine, snap: Dict) -> None:
         _restore_routing(e.routing, es["routing"])
         e.routing.listener = listener
         e.tuples_sent = es["tuples_sent"]
+        e.exchange.sent_per_worker[:] = es["sent_per_worker"]
         e.units_moved = es["units_moved"]
         e.strategy = es["strategy"]
     for op, os_ in zip(engine.ops, snap["ops"]):

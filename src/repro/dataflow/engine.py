@@ -27,6 +27,19 @@ marker-aligned point at which no chunk is in flight, so
 Fault tolerance mirrors §2.2: :mod:`repro.dataflow.checkpoint` snapshots
 queues/state/routing/controller at tick boundaries (aligned markers) and
 the engine can restore and replay after an injected worker failure.
+
+Data plane
+----------
+Every edge delegates chunk routing + scatter to the columnar exchange
+subsystem (:mod:`repro.dataflow.exchange`): one backend partition call
+(destinations + per-worker histogram) and one stable sort per chunk.  The
+partition backend — ``"numpy"`` (default) or ``"pallas"`` (the TPU
+exchange kernel; bit-identical destinations) — is chosen per engine via
+``Engine(partition_backend=...)`` or globally via the
+``REPRO_PARTITION_BACKEND`` environment variable.
+``Engine(reference=True)`` swaps in the pre-refactor tuple-at-a-time
+oracle (:mod:`repro.dataflow.reference`) for equivalence tests and
+benchmark baselines.
 """
 from __future__ import annotations
 
@@ -39,8 +52,9 @@ from ..core.controller import ReshapeController
 from ..core.partitioner import RoutingTable
 from ..core.state_migration import choose_strategy
 from ..core.types import MigrationStrategy, ReshapeConfig, StateMutability, TransferMode
+from .exchange import BackendSpec, Exchange
 from .operators import Operator, Sink
-from .tuples import Chunk
+from .tuples import Chunk, concat
 
 
 class Source:
@@ -72,9 +86,15 @@ class Source:
 
 
 class Edge:
-    """A partitioned exchange: RoutingTable + destination operator."""
+    """A partitioned exchange: RoutingTable + destination operator.
 
-    def __init__(self, dst: Operator, num_keys: int, *, init: str = "hash"):
+    The data plane (route + scatter) lives in the edge's
+    :class:`~repro.dataflow.exchange.Exchange`; the edge keeps the control
+    plane: migration-strategy synchronization on routing rewrites.
+    """
+
+    def __init__(self, dst: Operator, num_keys: int, *, init: str = "hash",
+                 backend: BackendSpec = None, reference: bool = False):
         self.dst = dst
         self.routing = RoutingTable(num_keys, dst.num_workers, init=init)
         dst.ensure_key_stats(num_keys)
@@ -84,19 +104,28 @@ class Edge:
         #: controller is attached (engine default: replicate-or-scatter).
         self.strategy: Optional[MigrationStrategy] = None
         self.routing.listener = self._on_rewrite
-        self.tuples_sent = 0
+        if reference:
+            from .reference import ReferenceExchange
+            self.exchange = ReferenceExchange(self.routing, dst)
+        else:
+            self.exchange = Exchange(self.routing, dst, backend)
         self.units_moved = 0.0
 
+    @property
+    def tuples_sent(self) -> int:
+        return self.exchange.tuples_sent
+
+    @tuples_sent.setter
+    def tuples_sent(self, n: int) -> None:
+        self.exchange.tuples_sent = int(n)
+
+    @property
+    def sent_per_worker(self) -> np.ndarray:
+        """Per-worker tuples routed over this edge (the backend histogram)."""
+        return self.exchange.sent_per_worker
+
     def send(self, chunk: Chunk) -> None:
-        keys, vals = chunk
-        if keys.size == 0:
-            return
-        dest = self.routing.route_chunk(keys)
-        self.tuples_sent += int(keys.size)
-        for w in range(self.dst.num_workers):
-            m = dest == w
-            if m.any():
-                self.dst.receive(w, keys[m], vals[m])
+        self.exchange.send(chunk)
 
     # ---- state-migration synchronization (paper §5, Fig. 10) ---------- #
     def _on_rewrite(self, keys: List[int], old_rows: np.ndarray, new_rows: np.ndarray) -> None:
@@ -194,9 +223,18 @@ class EngineAdapter:
 
 
 class Engine:
-    """A DAG of sources, operators and partitioned edges."""
+    """A DAG of sources, operators and partitioned edges.
 
-    def __init__(self):
+    ``partition_backend`` selects the exchange backend for every edge
+    (``"numpy"`` | ``"pallas"`` | a PartitionBackend instance | None for
+    the REPRO_PARTITION_BACKEND env default); ``reference=True`` runs the
+    pre-refactor tuple-at-a-time data plane instead (testing oracle).
+    """
+
+    def __init__(self, *, partition_backend: BackendSpec = None,
+                 reference: bool = False):
+        self.partition_backend = partition_backend
+        self.reference = bool(reference)
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []
@@ -220,7 +258,8 @@ class Engine:
         return op
 
     def connect(self, producer, consumer: Operator, num_keys: int, *, init: str = "hash") -> Edge:
-        edge = Edge(consumer, num_keys, init=init)
+        edge = Edge(consumer, num_keys, init=init,
+                    backend=self.partition_backend, reference=self.reference)
         producer.out_edge = edge
         self.edges.append(edge)
         self.upstreams.setdefault(consumer.name, []).append(producer)
@@ -273,22 +312,25 @@ class Engine:
                 chunk = src.emit()
                 if chunk is not None and src.out_edge is not None:
                     src.out_edge.send(chunk)
-        # 2. operators process (topo order; outputs visible downstream now)
+        # 2. operators process (topo order; outputs visible downstream now).
+        # A tick's output chunks (one per emitting worker) ride a single
+        # exchange send: one partition + one scatter per operator per tick.
         for op in self.ops:
             if op.finished:
                 continue
-            for chunk in op.tick():
-                if op.out_edge is not None:
-                    op.out_edge.send(chunk)
+            outs = op.tick()
+            if outs and op.out_edge is not None:
+                op.out_edge.send(outs[0] if len(outs) == 1 else concat(outs))
         # 3. END propagation
         for op in self.ops:
             if op.finished:
                 continue
             ups = self.upstreams.get(op.name, [])
             if ups and all(self._producer_done(u) for u in ups) and op.queues_empty():
-                for chunk in op.on_end():
-                    if op.out_edge is not None:
-                        op.out_edge.send(chunk)
+                outs = op.on_end()
+                if outs and op.out_edge is not None:
+                    op.out_edge.send(outs[0] if len(outs) == 1
+                                     else concat(outs))
         # 4. controllers
         for att in self.controllers:
             if not att.op.finished:

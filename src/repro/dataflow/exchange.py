@@ -1,0 +1,169 @@
+"""The columnar exchange subsystem: chunk routing + scatter for every edge.
+
+An :class:`Exchange` owns the data-plane side of one partitioned edge.  Per
+chunk it does exactly one *partition* (destination worker per record + the
+per-worker histogram, via a pluggable :class:`PartitionBackend`) and one
+*scatter* (a single stable ``argsort(dest)`` followed by histogram-derived
+slice boundaries), replacing the O(workers x records) boolean-mask loop of
+the tuple-at-a-time engine.
+
+Backends
+--------
+``numpy``   (default) the host path: ``RoutingTable.advance_counters`` +
+            the canonical fixed-point inverse-CDF rule, pure numpy.
+``pallas``  the device path: the same counters feed
+            :func:`repro.kernels.partition.partition` (interpret mode off
+            TPU), which returns the per-worker histogram for free — the
+            workload metric phi without a second pass.  Destinations are
+            bit-identical to the numpy backend (see the canonical-rule note
+            in :mod:`repro.core.partitioner`).
+
+Both backends route through the same per-key counters owned by the edge's
+``RoutingTable``, so backends can be swapped mid-run (or compared record
+for record) without perturbing the low-discrepancy sequence.
+
+Select a backend per engine (``Engine(partition_backend=...)``), per edge,
+or globally via the ``REPRO_PARTITION_BACKEND`` environment variable.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.partitioner import RoutingTable
+from .tuples import Chunk
+
+
+class PartitionBackend:
+    """Computes (destinations, per-worker histogram) for one chunk.
+
+    Implementations must consume ``routing.advance_counters(keys)`` exactly
+    once per chunk so the deterministic low-discrepancy sequence advances
+    identically under every backend.
+    """
+
+    name = "abstract"
+
+    def partition(self, routing: RoutingTable,
+                  keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (dest [n] int64, hist [num_workers] int64)."""
+        raise NotImplementedError
+
+
+class NumpyPartitionBackend(PartitionBackend):
+    """Host path: fixed-point inverse-CDF routing in pure numpy."""
+
+    name = "numpy"
+
+    def partition(self, routing, keys):
+        counters = routing.advance_counters(keys)
+        dest = routing.route_lowdiscrepancy(keys, counters)
+        hist = np.bincount(dest, minlength=routing.num_workers)
+        return dest, hist
+
+
+class PallasPartitionBackend(PartitionBackend):
+    """Device path: the Pallas exchange kernel (histogram for free).
+
+    The host still owns the per-key counters (one ``advance_counters`` per
+    chunk); the kernel receives the counters plus the host-computed float32
+    row-CDF, so its destinations match the numpy backend bit for bit.
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, block_n: int = 1024,
+                 interpret: Optional[bool] = None):
+        try:
+            import jax  # noqa: F401  (gate: container may lack jax)
+            from ..kernels import partition as _  # noqa: F401
+        except Exception as exc:  # pragma: no cover - env without jax
+            raise ImportError(
+                "PallasPartitionBackend requires jax + the repro.kernels "
+                "package; use the 'numpy' backend instead") from exc
+        self.block_n = int(block_n)
+        self.interpret = interpret
+
+    def partition(self, routing, keys):
+        import jax
+        import jax.numpy as jnp
+        from ..kernels import ops as kops
+
+        counters = routing.advance_counters(keys)
+        interpret = (self.interpret if self.interpret is not None
+                     else jax.default_backend() != "tpu")
+        if interpret:
+            # Off-TPU validation path: call the kernel module directly so
+            # shapes of odd-sized tail chunks don't churn the jit cache.
+            import importlib
+            kpart = importlib.import_module("repro.kernels.partition")
+            dest, hist = kpart.partition(
+                jnp.asarray(keys.astype(np.int32)),
+                jnp.asarray(counters.astype(np.int32)),
+                jnp.asarray(routing.weights),
+                cdf=jnp.asarray(routing.cdf32),
+                block_n=self.block_n, interpret=True)
+        else:  # pragma: no cover - TPU only
+            dest, hist = kops.partition(
+                jnp.asarray(keys.astype(np.int32)),
+                jnp.asarray(counters.astype(np.int32)),
+                jnp.asarray(routing.weights),
+                jnp.asarray(routing.cdf32), block_n=self.block_n)
+        return (np.asarray(dest, dtype=np.int64),
+                np.asarray(hist, dtype=np.int64))
+
+
+_BACKENDS = {
+    "numpy": NumpyPartitionBackend,
+    "pallas": PallasPartitionBackend,
+}
+
+BackendSpec = Union[None, str, PartitionBackend]
+
+
+def get_backend(spec: BackendSpec = None) -> PartitionBackend:
+    """Resolve a backend: instance, name, or None (env var, then numpy)."""
+    if isinstance(spec, PartitionBackend):
+        return spec
+    if spec is None:
+        spec = os.environ.get("REPRO_PARTITION_BACKEND", "numpy")
+    try:
+        return _BACKENDS[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown partition backend {spec!r}; "
+            f"choose from {sorted(_BACKENDS)}") from None
+
+
+class Exchange:
+    """Chunk routing + scatter for one edge (the data-plane hot path).
+
+    ``send`` partitions the chunk through the backend, stable-sorts by
+    destination once, and hands each worker its contiguous slice; the
+    backend histogram doubles as the slice boundaries and as the
+    per-worker traffic metric (``sent_per_worker``).
+    """
+
+    def __init__(self, routing: RoutingTable, dst, backend: BackendSpec = None):
+        self.routing = routing
+        self.dst = dst
+        self.backend = get_backend(backend)
+        self.tuples_sent = 0
+        self.sent_per_worker = np.zeros(routing.num_workers, dtype=np.int64)
+
+    def send(self, chunk: Chunk) -> None:
+        keys, vals = chunk
+        n = int(keys.size)
+        if n == 0:
+            return
+        dest, hist = self.backend.partition(self.routing, keys)
+        self.tuples_sent += n
+        self.sent_per_worker += hist
+        # int16 destinations take numpy's radix path for the stable sort
+        # (~6x faster than mergesort on int64 worker ids).
+        order = np.argsort(dest.astype(np.int16), kind="stable")
+        bounds = np.zeros(hist.size + 1, dtype=np.int64)
+        np.cumsum(hist, out=bounds[1:])
+        self.dst.receive_sorted(keys[order], vals[order], bounds)

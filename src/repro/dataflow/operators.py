@@ -16,6 +16,19 @@ The engine moves chunks, not tuples (DESIGN.md §7-1); a worker processes at
 most ``service_rate`` tuples per tick.  Scattered state (mutable + SBR,
 §5.4) is kept per (worker, scope) and merged to the scope's owner at END
 markers before any blocked output is released.
+
+Columnar state layout
+---------------------
+Keyed state is array-backed (:mod:`repro.dataflow.state`): GroupBy holds
+dense ``(counts, sums)`` columns folded per chunk with ``np.bincount``;
+Sort and the join build side hold per-scope row buffers appended one column
+*slice* per key segment (CSR on ``freeze()``); the join probe side counts
+matches with a single dense gather.  The containers still speak the old
+``dict``-of-scopes mapping protocol, so state migration (REPLICATE /
+MARKERS / SCATTERED, paper §5), END-marker merges, checkpointing and tests
+operate on scope-level views while the per-tuple Python loops are gone.
+Chunks arrive pre-partitioned from the exchange subsystem
+(:mod:`repro.dataflow.exchange`) via :meth:`Operator.receive_sorted`.
 """
 from __future__ import annotations
 
@@ -26,7 +39,8 @@ import numpy as np
 
 from ..core.state_migration import OperatorTraits
 from ..core.types import StateMutability, TransferMode
-from .tuples import Chunk, WorkerQueue, concat, empty_chunk, first_col
+from .state import AggStore, ScopeRows, segment_starts
+from .tuples import Chunk, WorkerQueue, first_col
 
 
 @dataclasses.dataclass
@@ -43,8 +57,10 @@ class Worker:
         self.queue = WorkerQueue()
         self.stats = WorkerStats()
         # Keyed state: scope -> val. Scope is an int key (hash ops) or a
-        # range id (range ops). `scattered` holds parts of scopes whose
-        # owner is another worker (§5.4).
+        # range id (range ops). Stateful operators swap these dicts for
+        # array-backed containers (AggStore / ScopeRows) at graph-build
+        # time; both speak the same mapping protocol. `scattered` holds
+        # parts of scopes whose owner is another worker (§5.4).
         self.state: Dict[int, object] = {}
         self.scattered: Dict[int, object] = {}
 
@@ -54,6 +70,9 @@ class Operator:
 
     #: traits consulted at workflow-compile time (§3.1 / Fig. 10)
     traits = OperatorTraits("abstract", StateMutability.IMMUTABLE)
+
+    #: container class for array-backed keyed state (None = plain dict)
+    state_factory: Optional[Callable[[int], object]] = None
 
     def __init__(self, name: str, num_workers: int, service_rate: int):
         self.name = name
@@ -76,17 +95,46 @@ class Operator:
     def _owned(self, worker: Worker, key: int) -> bool:
         return self.owner_of is None or int(self.owner_of[key]) == worker.wid
 
+    def _owned_mask(self, worker: Worker, keys: np.ndarray) -> np.ndarray:
+        if self.owner_of is None:
+            return np.ones(keys.shape[0], dtype=bool)
+        return self.owner_of[keys] == worker.wid
+
     # -- data plane ----------------------------------------------------- #
     def ensure_key_stats(self, num_keys: int) -> None:
         if self.arrived_by_key is None:
             self.arrived_by_key = np.zeros(num_keys, dtype=np.int64)
             self.key_arrivals_total = np.zeros(num_keys, dtype=np.int64)
+            self._alloc_state(num_keys)
+
+    def _alloc_state(self, num_keys: int) -> None:
+        """Swap untouched dict state for the operator's array container."""
+        if self.state_factory is None:
+            return
+        for w in self.workers:
+            if isinstance(w.state, dict) and not w.state:
+                w.state = self.state_factory(num_keys)
+            if isinstance(w.scattered, dict) and not w.scattered:
+                w.scattered = self.state_factory(num_keys)
 
     def receive(self, wid: int, keys: np.ndarray, vals: np.ndarray) -> None:
         self.workers[wid].queue.push(keys, vals)
         if self.arrived_by_key is not None and keys.size:
             np.add.at(self.arrived_by_key, keys, 1)
             np.add.at(self.key_arrivals_total, keys, 1)
+
+    def receive_sorted(self, keys: np.ndarray, vals: np.ndarray,
+                       bounds: np.ndarray) -> None:
+        """Scatter a destination-sorted chunk: worker w gets the slice
+        ``[bounds[w], bounds[w+1])``.  One key-stats update per chunk."""
+        for w in range(self.num_workers):
+            a, b = int(bounds[w]), int(bounds[w + 1])
+            if b > a:
+                self.workers[w].queue.push(keys[a:b], vals[a:b])
+        if self.arrived_by_key is not None and keys.size:
+            bc = np.bincount(keys, minlength=self.arrived_by_key.size)
+            self.arrived_by_key += bc
+            self.key_arrivals_total += bc
 
     def tick(self) -> List[Chunk]:
         """Each worker consumes up to service_rate tuples; returns outputs."""
@@ -194,14 +242,62 @@ class Project(Operator):
 
 
 # ----------------------------------------------------------------------- #
+# Shared behavior of row-buffer (CSR-style) keyed state                    #
+# ----------------------------------------------------------------------- #
+class _RowStateOp(Operator):
+    """Operators whose scope value is a growing row buffer (ScopeRows)."""
+
+    state_factory = ScopeRows
+
+    @staticmethod
+    def _scope_size(val) -> int:
+        if isinstance(val, list):
+            return int(sum(np.size(a) for a in val))
+        return 1
+
+    def state_units(self, wid: int, mode: TransferMode) -> float:
+        st = self.workers[wid].state
+        if isinstance(st, ScopeRows):
+            return float(st.total_rows())
+        return super().state_units(wid, mode)
+
+    def _append_segments(self, worker: Worker, keys: np.ndarray,
+                         vals: np.ndarray) -> None:
+        """Route each key segment of the chunk to owned vs scattered rows."""
+        order = np.argsort(keys, kind="stable")
+        ks, vs = keys[order], vals[order]
+        starts = segment_starts(ks)
+        bounds = np.r_[starts, ks.size]
+        for i, s in enumerate(starts):
+            k = int(ks[s])
+            table = worker.state if self._owned(worker, k) else worker.scattered
+            table.append_scope(k, vs[s:bounds[i + 1]])
+
+    def merge_scattered(self) -> int:
+        """Ship scattered row buffers to their scope owners (§5.4)."""
+        moved = 0
+        for w in self.workers:
+            scat = w.scattered
+            if not isinstance(scat, ScopeRows):
+                continue
+            for k in scat.present_scopes():
+                owner = (self.workers[int(self.owner_of[k])]
+                         if self.owner_of is not None else w)
+                moved += owner.state.extend_from(scat, int(k))
+            scat.clear()
+        return moved
+
+
+# ----------------------------------------------------------------------- #
 # HashJoin                                                                 #
 # ----------------------------------------------------------------------- #
-class HashJoinProbe(Operator):
+class HashJoinProbe(_RowStateOp):
     """Probe phase of HashJoin: immutable keyed state (paper Table 1).
 
     The build side is installed up-front via :meth:`install_build` (the
     paper's running example assumes the build phase finished, §3.1); each
-    probe tuple emits one output per matching build row.
+    probe tuple emits one output per matching build row.  Match counting is
+    one dense gather over the CSR row-length column.
     """
 
     traits = OperatorTraits(
@@ -219,17 +315,19 @@ class HashJoinProbe(Operator):
 
     def install_build(self, routing, build_keys: np.ndarray, build_vals: np.ndarray) -> None:
         """Partition the build table by the current routing owner."""
-        owner = routing.owner
-        for k, v in zip(build_keys, build_vals):
-            w = int(owner[int(k)])
-            self.workers[w].state.setdefault(int(k), []).append(float(v))
+        bk = np.asarray(build_keys, dtype=np.int64)
+        bv = np.asarray(build_vals, dtype=np.float64)
+        self.ensure_key_stats(routing.num_keys)
+        dest = routing.owner[bk]
+        for w in np.unique(dest):
+            m = dest == w
+            self.workers[int(w)].state.extend_segments(bk[m], bv[m])
 
     def process(self, worker, keys, vals):
-        matches = np.array(
-            [len(worker.state.get(int(k), worker.scattered.get(int(k), ())))
-             for k in keys],
-            dtype=np.int64,
-        )
+        matches = worker.state.counts_of(keys)
+        if len(worker.scattered):
+            matches = np.where(worker.state.present[keys], matches,
+                               worker.scattered.counts_of(keys))
         # Emit one tuple per (probe tuple x build match); join payload is
         # the probe val (enough for count/sum analytics downstream).
         out_keys = np.repeat(keys, matches)
@@ -237,7 +335,7 @@ class HashJoinProbe(Operator):
         return out_keys, out_vals
 
 
-class HashJoinBuild(Operator):
+class HashJoinBuild(_RowStateOp):
     """Build phase: mutable keyed state (key -> build rows)."""
 
     traits = OperatorTraits(
@@ -248,21 +346,8 @@ class HashJoinBuild(Operator):
     )
 
     def process(self, worker, keys, vals):
-        for k, v in zip(keys, vals):
-            k = int(k)
-            table = worker.state if self._owned(worker, k) else worker.scattered
-            table.setdefault(k, []).append(float(v))
+        self._append_segments(worker, keys, first_col(vals))
         return None
-
-    def merge_scattered(self) -> int:
-        moved = 0
-        for w in self.workers:
-            for k, rows in list(w.scattered.items()):
-                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
-                owner.state.setdefault(k, []).extend(rows)
-                moved += len(rows)
-            w.scattered.clear()
-        return moved
 
     def on_end(self):
         self.merge_scattered()
@@ -274,7 +359,11 @@ class HashJoinBuild(Operator):
 # GroupBy (hash-based, blocking)                                           #
 # ----------------------------------------------------------------------- #
 class GroupByAgg(Operator):
-    """count/sum per key; mutable, mergeable, blocking (paper §5.4)."""
+    """count/sum per key; mutable, mergeable, blocking (paper §5.4).
+
+    State is a dense (counts, sums) column pair per worker; a chunk folds
+    in with two ``np.bincount`` calls split by the owned/scattered mask.
+    """
 
     traits = OperatorTraits(
         "groupby",
@@ -283,17 +372,24 @@ class GroupByAgg(Operator):
         blocking=True,
     )
 
+    state_factory = AggStore
+
     def process(self, worker, keys, vals):
-        for k, v in zip(keys, first_col(vals)):
-            k = int(k)
-            table = worker.state if self._owned(worker, k) else worker.scattered
-            cnt, sm = table.get(k, (0, 0.0))
-            table[k] = (cnt + 1, sm + float(v))
+        v = first_col(vals)
+        owned = self._owned_mask(worker, keys)
+        if owned.all():
+            worker.state.add_many(keys, v)
+        else:
+            worker.state.add_many(keys[owned], v[owned])
+            worker.scattered.add_many(keys[~owned], v[~owned])
         return None
 
     @staticmethod
     def _scope_size(val) -> int:
         return 1
+
+    def state_units(self, wid: int, mode: TransferMode) -> float:
+        return float(len(self.workers[wid].state))
 
     def merge_scattered(self) -> int:
         """Ship every scattered scope to its owner and fold it in (§5.4).
@@ -302,12 +398,18 @@ class GroupByAgg(Operator):
         """
         moved = 0
         for w in self.workers:
-            for k, (cnt, sm) in list(w.scattered.items()):
-                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
-                c0, s0 = owner.state.get(k, (0, 0.0))
-                owner.state[k] = (c0 + cnt, s0 + sm)
-                moved += 1
-            w.scattered.clear()
+            scat = w.scattered
+            if not isinstance(scat, AggStore):
+                continue
+            sk = scat.present_scopes()
+            if sk.size == 0:
+                continue
+            owners = (self.owner_of[sk] if self.owner_of is not None
+                      else np.full(sk.size, w.wid))
+            for o in np.unique(owners):
+                self.workers[int(o)].state.merge_from(scat, sk[owners == o])
+            moved += int(sk.size)
+            scat.clear()
         return moved
 
     def on_end(self):
@@ -315,25 +417,26 @@ class GroupByAgg(Operator):
         self.finished = True
         outs = []
         for w in self.workers:
-            if not w.state:
+            ks = w.state.present_scopes()
+            if ks.size == 0:
                 continue
-            ks = np.fromiter(w.state.keys(), dtype=np.int64)
-            cs = np.array([w.state[int(k)][1] for k in ks], dtype=np.float64)
+            cs = w.state.sums[ks]
             w.stats.emitted_total += int(ks.size)
-            outs.append((ks, cs))
+            outs.append((ks.astype(np.int64), cs.astype(np.float64)))
         return outs
 
 
 # ----------------------------------------------------------------------- #
 # Sort (range-partitioned, blocking)                                       #
 # ----------------------------------------------------------------------- #
-class RangeSort(Operator):
+class RangeSort(_RowStateOp):
     """Range-partitioned sort on ``vals``; scope = range id = routing key.
 
     Keys arriving here are *range ids* (the range partitioner upstream maps
     sort-attribute -> range id); vals are the sort attribute.  State is one
-    growing buffer per range; SBR splits a range's records across workers
-    producing scattered buffers merged at END (paper Fig. 11).
+    growing buffer per range, appended one column slice per key segment;
+    SBR splits a range's records across workers producing scattered buffers
+    merged at END (paper Fig. 11).
     """
 
     traits = OperatorTraits(
@@ -344,35 +447,16 @@ class RangeSort(Operator):
     )
 
     def process(self, worker, keys, vals):
-        v1 = first_col(vals)
-        for k in np.unique(keys):
-            sel = v1[keys == k]
-            k = int(k)
-            table = worker.state if self._owned(worker, k) else worker.scattered
-            table.setdefault(k, []).append(sel)
+        self._append_segments(worker, keys, first_col(vals))
         return None
-
-    @staticmethod
-    def _scope_size(val) -> int:
-        return int(sum(a.size for a in val)) if isinstance(val, list) else 1
-
-    def merge_scattered(self) -> int:
-        moved = 0
-        for w in self.workers:
-            for k, parts in list(w.scattered.items()):
-                owner = self.workers[int(self.owner_of[k])] if self.owner_of is not None else w
-                owner.state.setdefault(k, []).extend(parts)
-                moved += sum(p.size for p in parts)
-            w.scattered.clear()
-        return moved
 
     def on_end(self):
         self.merge_scattered()
         self.finished = True
         outs = []
         for w in self.workers:
-            for k in sorted(w.state):
-                buf = np.sort(np.concatenate(w.state[k])) if w.state[k] else np.zeros(0)
+            for k in w.state.present_scopes():
+                buf = np.sort(w.state.scope_array(int(k)))
                 w.stats.emitted_total += int(buf.size)
                 outs.append((np.full(buf.size, k, dtype=np.int64), buf))
         return outs
@@ -382,7 +466,7 @@ class RangeSort(Operator):
         per_range: Dict[int, List[np.ndarray]] = {}
         for w in self.workers:
             for k, parts in w.state.items():
-                per_range.setdefault(k, []).extend(parts)
+                per_range.setdefault(int(k), []).extend(parts)
         out = []
         for k in sorted(per_range):
             out.append(np.sort(np.concatenate(per_range[k])))
@@ -411,8 +495,9 @@ class Sink(Operator):
         self._tick = 0
 
     def process(self, worker, keys, vals):
-        np.add.at(self.counts, keys, 1)
-        np.add.at(self.sums, keys, first_col(vals))
+        self.counts += np.bincount(keys, minlength=self.counts.size)
+        self.sums += np.bincount(keys, weights=first_col(vals),
+                                 minlength=self.sums.size)
         return None
 
     def snapshot(self, tick: int) -> None:

@@ -3,7 +3,9 @@
 The engine moves data in *chunks* -- parallel (keys, vals) numpy arrays --
 instead of tuple-at-a-time (DESIGN.md §3 "assumptions changed").  A worker's
 unprocessed queue is a chunk deque with O(1) amortized pop of any prefix;
-its length in tuples is the paper's workload metric phi.
+its length in tuples is the paper's workload metric phi.  Chunks arrive as
+contiguous destination-sorted slices from the exchange subsystem
+(:mod:`repro.dataflow.exchange`), so a push never copies.
 """
 from __future__ import annotations
 

@@ -23,6 +23,18 @@ from .engine import Edge, Engine, Source
 from .operators import Filter, GroupByAgg, HashJoinProbe, Operator, Project, RangeSort, Sink
 
 
+def _engine(reference: bool, partition_backend) -> Engine:
+    return Engine(partition_backend=partition_backend, reference=reference)
+
+
+def _op_cls(cls, reference: bool):
+    # Columnar operator class, or its pre-refactor oracle twin.
+    if not reference:
+        return cls
+    from .reference import REFERENCE_OPS
+    return REFERENCE_OPS.get(cls, cls)
+
+
 @dataclasses.dataclass
 class Workflow:
     engine: Engine
@@ -61,16 +73,19 @@ def build_w1(
     cfg: Optional[ReshapeConfig] = None,
     pin_helpers: bool = True,
     seed: int = 0,
+    reference: bool = False,
+    partition_backend=None,
 ) -> Workflow:
     keys, vals = datasets.tweets_stream(scale, seed)
     nkeys = datasets.NUM_LOCATIONS
     emit_rate = num_workers * service_rate          # join is the bottleneck
 
-    eng = Engine()
+    eng = _engine(reference, partition_backend)
     src = eng.add_source(Source("tweets", keys, vals, emit_rate))
     filt = eng.add_op(Filter("filter", num_workers, emit_rate,
                              predicate=lambda k, v: np.ones(k.shape, dtype=bool)))
-    join = eng.add_op(HashJoinProbe("join", num_workers, service_rate))
+    join = eng.add_op(_op_cls(HashJoinProbe, reference)(
+        "join", num_workers, service_rate))
     sink = eng.add_op(Sink("viz", nkeys))
 
     eng.connect(src, filt, nkeys)
@@ -116,21 +131,25 @@ def build_w2(
     n_tuples: int = 60_000,
     cfg: Optional[ReshapeConfig] = None,
     seed: int = 1,
+    reference: bool = False,
+    partition_backend=None,
 ) -> Workflow:
     spec = datasets.DsbSpec()
     dates, items, custs, vals = datasets.dsb_sales(n_tuples, spec, seed)
     emit_rate = num_workers * service_rate
 
-    eng = Engine()
+    eng = _engine(reference, partition_backend)
     # vals columns: [item, customer, amount] so downstream re-keys by item.
     payload = np.stack([items.astype(np.float64), custs.astype(np.float64), vals], axis=1)
     src = eng.add_source(Source("sales", dates, payload, emit_rate))
 
-    join_date = eng.add_op(HashJoinProbe("join_date", num_workers, service_rate))
+    _join = _op_cls(HashJoinProbe, reference)
+    join_date = eng.add_op(_join("join_date", num_workers, service_rate))
     rekey = eng.add_op(Project("rekey_item", num_workers, emit_rate,
                                fn=lambda k, v: (v[:, 0].astype(np.int64), v[:, 1:])))
-    join_item = eng.add_op(HashJoinProbe("join_item", num_workers, service_rate))
-    grp = eng.add_op(GroupByAgg("groupby_item", num_workers, emit_rate))
+    join_item = eng.add_op(_join("join_item", num_workers, service_rate))
+    grp = eng.add_op(_op_cls(GroupByAgg, reference)(
+        "groupby_item", num_workers, emit_rate))
     sink = eng.add_op(Sink("viz", spec.num_items))
 
     e_date = eng.connect(src, join_date, spec.num_dates)
@@ -170,6 +189,8 @@ def build_w3(
     n_tuples: int = 40_000,
     cfg: Optional[ReshapeConfig] = None,
     seed: int = 2,
+    reference: bool = False,
+    partition_backend=None,
 ) -> Workflow:
     prices = datasets.tpch_orders(n_tuples, seed)
     bounds = datasets.price_ranges(num_workers * 2)   # 2 ranges per worker
@@ -177,9 +198,10 @@ def build_w3(
     nranges = num_workers * 2
     emit_rate = num_workers * service_rate
 
-    eng = Engine()
+    eng = _engine(reference, partition_backend)
     src = eng.add_source(Source("orders", rids, prices, emit_rate))
-    sort = eng.add_op(RangeSort("sort", num_workers, service_rate))
+    sort = eng.add_op(_op_cls(RangeSort, reference)(
+        "sort", num_workers, service_rate))
     sink = eng.add_op(Sink("out", nranges))
 
     e_sort = eng.connect(src, sort, nranges)
@@ -204,14 +226,17 @@ def build_w4(
     n_tuples: int = 80_000,
     cfg: Optional[ReshapeConfig] = None,
     seed: int = 3,
+    reference: bool = False,
+    partition_backend=None,
 ) -> Workflow:
     num_keys = 42
     keys, vals = datasets.synthetic_changing(n_tuples, num_keys, seed)
     emit_rate = num_workers * service_rate
 
-    eng = Engine()
+    eng = _engine(reference, partition_backend)
     src = eng.add_source(Source("synthetic", keys, vals, emit_rate))
-    join = eng.add_op(HashJoinProbe("join", num_workers, service_rate))
+    join = eng.add_op(_op_cls(HashJoinProbe, reference)(
+        "join", num_workers, service_rate))
     sink = eng.add_op(Sink("viz", num_keys))
 
     e = eng.connect(src, join, num_keys)

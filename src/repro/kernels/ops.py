@@ -38,10 +38,14 @@ def rwkv_scan(r, k, v, w, u, state0=None):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n",))
-def partition(keys, counters, weights, *, block_n: int = 1024):
-    """Routing-table partition: (dest [N], histogram [W])."""
-    return _part.partition(keys, counters, weights, block_n=block_n,
-                           interpret=_default_interpret())
+def partition(keys, counters, weights, cdf=None, *, block_n: int = 1024):
+    """Routing-table partition: (dest [N], histogram [W]).
+
+    ``cdf`` optionally supplies the host-computed float32 row-CDF
+    (``RoutingTable.cdf32``) for bit-exact host/device agreement.
+    """
+    return _part.partition(keys, counters, weights, cdf=cdf,
+                           block_n=block_n, interpret=_default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))

@@ -10,22 +10,33 @@ destinations come from an inverse-CDF lookup (records x workers compare —
 VPU-friendly) and the histogram from a one-hot column sum (MXU-friendly).
 Grid tiles the record stream; the routing table tile stays resident in
 VMEM; the histogram accumulates in VMEM scratch across the grid.
+
+The low-discrepancy threshold is the *fixed-point* golden-ratio Weyl
+sequence of :mod:`repro.core.partitioner` — 32-bit wrapping integer
+arithmetic whose top 24 bits convert to float32 losslessly — and the CDF is
+taken as a float32 input (the host computes it once per table version), so
+kernel destinations are bit-identical to the numpy exchange backend.
+
+Chunks of arbitrary length are padded internally to a block multiple;
+padded lanes are masked out of the histogram and sliced off the returned
+destinations.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_GOLDEN = 0.6180339887498949
+from ..core.ops import ld_thresholds, saturated_cdf32
 
 
 def _partition_kernel(keys_ref, counters_ref, cdf_ref, dest_ref, hist_ref,
-                      hist_acc, *, bn: int, n_workers: int, n_blocks: int):
+                      hist_acc, *, bn: int, n_workers: int, n_blocks: int,
+                      n_valid: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -33,15 +44,18 @@ def _partition_kernel(keys_ref, counters_ref, cdf_ref, dest_ref, hist_ref,
         hist_acc[...] = jnp.zeros_like(hist_acc)
 
     keys = keys_ref[...]                                 # [bn]
-    counters = counters_ref[...].astype(jnp.float32)
-    u = jnp.mod((counters + 1.0) * _GOLDEN, 1.0)         # [bn]
+    u = ld_thresholds(counters_ref[...])                 # [bn] in [0, 1)
     rows = cdf_ref[keys]                                 # [bn, W] gather
     dest = jnp.sum(u[:, None] >= rows, axis=1).astype(jnp.int32)
     dest = jnp.minimum(dest, n_workers - 1)
     dest_ref[...] = dest
     onehot = (dest[:, None] ==
               jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 1))
-    hist_acc[...] += onehot.astype(jnp.int32).sum(axis=0, keepdims=True)
+    # Mask padded lanes (global index >= n_valid) out of the histogram.
+    idx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 0)
+    valid = idx < n_valid
+    hist_acc[...] += jnp.where(valid, onehot, False).astype(jnp.int32).sum(
+        axis=0, keepdims=True)
 
     @pl.when(i == n_blocks - 1)
     def _finish():
@@ -53,19 +67,35 @@ def partition(
     counters: jnp.ndarray,          # [N] int32 per-key running index
     weights: jnp.ndarray,           # [K, W] row-stochastic routing table
     *,
+    cdf: Optional[jnp.ndarray] = None,   # [K, W] float32 row-CDF override
     block_n: int = 1024,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (dest [N] int32, histogram [W] int32)."""
+    """Returns (dest [N] int32, histogram [W] int32).
+
+    ``cdf`` lets the caller supply the host-computed float32 row-CDF
+    (``RoutingTable.cdf32``) so host and device rounding agree bit-exactly;
+    by default it is derived from ``weights`` here.  ``N`` may be any
+    length — the chunk is padded to a block multiple internally and padded
+    records never reach the histogram.
+    """
     N = keys.shape[0]
     K, W = weights.shape
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    if N == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((W,), jnp.int32))
+    keys = keys.astype(jnp.int32)
+    counters = counters.astype(jnp.int32)
     bn = min(block_n, N)
-    assert N % bn == 0, "pad the chunk to a block multiple"
-    n_blocks = N // bn
-    cdf = jnp.cumsum(weights.astype(jnp.float32), axis=1)
+    pad = (-N) % bn
+    if pad:
+        keys = jnp.concatenate([keys, jnp.zeros((pad,), jnp.int32)])
+        counters = jnp.concatenate([counters, jnp.zeros((pad,), jnp.int32)])
+    n_blocks = (N + pad) // bn
 
     kernel = functools.partial(_partition_kernel, bn=bn, n_workers=W,
-                               n_blocks=n_blocks)
+                               n_blocks=n_blocks, n_valid=N)
     dest, hist = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
@@ -79,10 +109,10 @@ def partition(
             pl.BlockSpec((1, W), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N + pad,), jnp.int32),
             jax.ShapeDtypeStruct((1, W), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, W), jnp.int32)],
         interpret=interpret,
-    )(keys, counters, cdf)
-    return dest, hist[0]
+    )(keys, counters, cdf.astype(jnp.float32))
+    return dest[:N], hist[0]

@@ -6,7 +6,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-_GOLDEN = 0.6180339887498949
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -55,16 +54,23 @@ def rwkv_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def partition(keys: jnp.ndarray, counters: jnp.ndarray,
-              weights: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              weights: jnp.ndarray,
+              cdf: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Routing-table partition (the dataflow exchange hot spot).
 
     keys [N] int32; counters [N] per-key running index; weights [K, W]
     row-stochastic. Returns (dest [N] int32, histogram [W] int32) via the
-    low-discrepancy inverse-CDF rule of repro.core.ops.route_records.
+    fixed-point low-discrepancy inverse-CDF rule of
+    repro.core.ops.route_records (the canonical rule shared with the host
+    partitioner and the Pallas kernel).
     """
-    u = jnp.mod((counters.astype(jnp.float32) + 1.0) * _GOLDEN, 1.0)
-    cdf = jnp.cumsum(weights[keys], axis=1)
-    dest = jnp.sum(u[:, None] >= cdf, axis=1).astype(jnp.int32)
+    from ..core.ops import ld_thresholds, saturated_cdf32
+
+    u = ld_thresholds(counters)
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    dest = jnp.sum(u[:, None] >= cdf.astype(jnp.float32)[keys],
+                   axis=1).astype(jnp.int32)
     W = weights.shape[1]
     dest = jnp.minimum(dest, W - 1)
     hist = jnp.sum(jax.nn.one_hot(dest, W, dtype=jnp.int32), axis=0)

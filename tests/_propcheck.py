@@ -1,0 +1,89 @@
+"""Property-test shim: real hypothesis when installed, else a small
+deterministic fallback.
+
+The tier-1 suite must collect and run without optional dependencies
+(``hypothesis`` is not in the container image).  Importing ``given`` /
+``settings`` / ``st`` from this module gives each property test:
+
+  * the real hypothesis decorators when the package is available;
+  * otherwise a fixed-seed sampler that draws ``FALLBACK_EXAMPLES``
+    deterministic cases from a miniature strategy language supporting the
+    subset used by this suite (``st.integers``, ``st.floats``,
+    ``st.lists``) and runs the test body once per case.
+
+The fallback is deliberately deterministic (seeded PCG64) so failures
+reproduce exactly.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:  # pragma: no cover - exercised implicitly
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # sample(rng) -> value
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*garg_strategies, **gkw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # Hypothesis-style binding: positional strategies fill the
+            # *last* positional params; keyword strategies bind by name.
+            # Everything a strategy fills disappears from the signature
+            # pytest sees (else pytest would demand fixtures for them).
+            bound_names = set(gkw_strategies)
+            if garg_strategies:
+                pos = [p.name for p in params
+                       if p.name != "self" and p.name not in bound_names]
+                bound_names.update(pos[-len(garg_strategies):])
+            passthrough = [p for p in params if p.name not in bound_names]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(FALLBACK_EXAMPLES):
+                    drawn = [s.sample(rng) for s in garg_strategies]
+                    drawn_kw = {k: s.sample(rng)
+                                for k, s in gkw_strategies.items()}
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+
+            del wrapper.__wrapped__  # hide fn's params from pytest
+            wrapper.__signature__ = sig.replace(parameters=passthrough)
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

