@@ -1,21 +1,33 @@
 """Engine data-plane throughput: tuples/sec through a Filter -> GroupBy
-pipeline under the columnar exchange subsystem.
+pipeline under the fused exchange + batched tick scheduler.
 
 Sweeps worker counts and chunk sizes (the per-tick service rate) over a
 zipf-skewed key stream and reports tuples/sec for:
 
   reference  the pre-refactor tuple-at-a-time plane (dict state, per-worker
-             mask scatter) — the baseline the refactor is measured against
-  numpy      the columnar plane with the numpy partition backend
-  pallas     the columnar plane with the Pallas exchange kernel
-             (interpret mode off-TPU, so off-TPU numbers are a correctness
-             demonstration, not kernel speed)
+             mask scatter) — the baseline everything is measured against
+  columnar   the PR-1 columnar plane: fused exchange, per-tick scheduler
+             (``batch_ticks=1``) — isolates the batched scheduler's gain
+  numpy      the full fused plane: numpy partition backend + batched tick
+             scheduler (``batch_ticks=BATCH`` super-chunk passes)
+  pallas     as ``numpy`` with the Pallas exchange kernel (interpret mode
+             off-TPU, so off-TPU numbers are a correctness demonstration,
+             not kernel speed)
 
-Emits ``speedup_vs_reference`` per row; the acceptance bar for the
-refactor is >= 5x on the numpy backend at production-ish chunk sizes.
+Every row's ``speedup_vs_reference`` is computed against a reference
+baseline timed at the *same* stream length (the pallas rows run a shorter
+stream to bound interpret-mode retraces, so they get their own same-``n``
+baseline rather than borrowing the full-length one).
+
+Acceptance bar for this refactor: ``numpy`` >= 2x ``columnar`` (and >=
+10x ``reference``) tuples/sec at chunk >= 512.  The table is persisted to
+``BENCH_engine_throughput.json`` at the repo root so future PRs can diff
+the perf trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -27,6 +39,11 @@ from .common import emit
 
 NUM_KEYS = 64
 ZIPF_A = 1.4
+BATCH = 8          # batched-scheduler window (and the sink snapshot cadence)
+PALLAS_N = 20_000  # interpret mode retraces per shape: keep the stream short
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_engine_throughput.json")
 
 
 def _stream(n: int, seed: int = 0):
@@ -36,9 +53,11 @@ def _stream(n: int, seed: int = 0):
     return keys, vals
 
 
-def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None):
+def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None,
+           batch_ticks=1):
     keys, vals = _stream(n_tuples)
-    eng = Engine(partition_backend=backend, reference=reference)
+    eng = Engine(partition_backend=backend, reference=reference,
+                 batch_ticks=batch_ticks)
     src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
     filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
                              predicate=lambda k, v: v >= 0))
@@ -47,52 +66,75 @@ def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None):
     else:
         Grp = GroupByAgg
     grp = eng.add_op(Grp("groupby", num_workers, chunk))
-    sink = eng.add_op(Sink("sink", NUM_KEYS))
+    # Snapshot every BATCH ticks for every mode, so the result cadence —
+    # which bounds tick fusion — is identical across rows.
+    sink = eng.add_op(Sink("sink", NUM_KEYS, snapshot_every=BATCH))
     eng.connect(src, filt, NUM_KEYS)
     eng.connect(filt, grp, NUM_KEYS)
     eng.connect(grp, sink, NUM_KEYS)
     return eng, sink
 
 
-def _run_one(n_tuples, num_workers, chunk, *, reference=False, backend=None):
-    eng, sink = _build(n_tuples, num_workers, chunk,
-                       reference=reference, backend=backend)
-    t0 = time.perf_counter()
-    eng.run()
-    dt = time.perf_counter() - t0
-    return n_tuples / max(dt, 1e-9), sink
+def _run_one(n_tuples, num_workers, chunk, *, reference=False, backend=None,
+             batch_ticks=1, reps=3):
+    """Best-of-``reps`` tuples/sec (this box is noisy; max is the least
+    contended run) plus the last run's sink for the correctness check."""
+    best = 0.0
+    for _ in range(reps):
+        eng, sink = _build(n_tuples, num_workers, chunk, reference=reference,
+                           backend=backend, batch_ticks=batch_ticks)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        best = max(best, n_tuples / max(dt, 1e-9))
+    return best, sink
 
 
 def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
     rows = []
     for num_workers in (4, 16):
         for chunk in (64, 512, 2048):
-            base_tps, base_sink = _run_one(
-                n_tuples, num_workers, chunk, reference=True)
-            variants = [("numpy", dict(backend="numpy"))]
-            if include_pallas:
-                # interpret mode retraces per shape: keep the stream short
-                variants.append(("pallas", dict(backend="pallas",
-                                                n=min(n_tuples, 20_000))))
+            baselines = {}          # stream length -> (tps, sink)
+
+            def base(n):
+                if n not in baselines:
+                    baselines[n] = _run_one(n, num_workers, chunk,
+                                            reference=True)
+                return baselines[n]
+
+            base_tps = base(n_tuples)[0]
             rows.append(dict(mode="reference", workers=num_workers,
                              chunk=chunk, tuples_per_sec=round(base_tps),
                              speedup_vs_reference=1.0))
+            variants = [
+                ("columnar", dict(backend="numpy", batch_ticks=1)),
+                ("numpy", dict(backend="numpy", batch_ticks=BATCH)),
+            ]
+            if include_pallas:
+                variants.append(("pallas", dict(backend="pallas",
+                                                batch_ticks=BATCH,
+                                                n=min(n_tuples, PALLAS_N))))
             for mode, opts in variants:
-                n = opts.get("n", n_tuples)
+                n = opts.pop("n", n_tuples)
                 try:
-                    tps, sink = _run_one(n, num_workers, chunk,
-                                         backend=opts["backend"])
+                    tps, sink = _run_one(n, num_workers, chunk, **opts)
                 except ImportError:
                     continue            # container without jax
-                if n == n_tuples:
-                    assert np.array_equal(sink.counts, base_sink.counts), mode
+                ref_tps, ref_sink = base(n)   # honest same-n baseline
+                assert np.array_equal(sink.counts, ref_sink.counts), mode
                 rows.append(dict(
                     mode=mode, workers=num_workers, chunk=chunk,
                     tuples_per_sec=round(tps),
-                    speedup_vs_reference=round(tps / base_tps, 2)))
+                    speedup_vs_reference=round(tps / ref_tps, 2)))
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
           "speedup_vs_reference"])
+    # Perf trajectory for future PRs to diff against.
+    with open(JSON_PATH, "w") as f:
+        json.dump([{k: r[k] for k in
+                    ("mode", "workers", "chunk", "tuples_per_sec")}
+                   for r in rows], f, indent=1)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,10 @@
 
 ``python -m benchmarks.run [--only name]`` runs them all and prints
 ``bench,<columns...>`` CSV lines; each bench also persists its table to
-results/bench/<name>.csv. The roofline table (§Roofline) is produced by
+results/bench/<name>.csv. The engine-throughput bench additionally writes
+``BENCH_engine_throughput.json`` at the repo root (schema: mode / workers
+/ chunk / tuples_per_sec) so future PRs can diff the perf trajectory.
+The roofline table (§Roofline) is produced by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
 """
 from __future__ import annotations

@@ -80,6 +80,22 @@ def route_records(
     return jnp.minimum(dest, weights.shape[1] - 1)
 
 
+def within_dest_ranks(dest: jax.Array, num_workers: int) -> jax.Array:
+    """Within-destination arrival rank per record (the counting scatter).
+
+    ranks[i] = #{j < i : dest[j] == dest[i]}.  With the exclusive cumsum
+    of the per-destination histogram as base offsets, ``base[dest] +
+    ranks`` is the stable destination-grouped position of every record —
+    a stable sort by destination with no sort.  jnp twin of the rank
+    output of :func:`repro.kernels.partition.partition_scatter` (one-hot
+    cumsum: MXU-friendly and fully static-shaped).
+    """
+    onehot = jax.nn.one_hot(dest, num_workers, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(cum, dest[:, None].astype(jnp.int32),
+                               axis=1)[:, 0]
+
+
 def per_key_counters(keys: jax.Array, num_keys: int) -> jax.Array:
     """Running per-key occurrence index for each record in a chunk.
 

@@ -1,12 +1,14 @@
 """Pipelined dataflow engine (Amber/Flink stand-in) hosting Reshape.
 
 Layout:
-  tuples.py      columnar chunks + worker queues (phi metric source)
-  exchange.py    columnar exchange: chunk routing + scatter per edge,
-                 pluggable numpy/Pallas partition backend
+  tuples.py      columnar chunks + ring-buffer worker queues (zero-copy
+                 pops; phi metric source)
+  exchange.py    fused one-pass exchange: partition→rank→scatter per edge
+                 via ScatterPlan, pluggable numpy/Pallas backend
   state.py       array-backed keyed-state containers (AggStore/ScopeRows)
   operators.py   Filter/Project/HashJoin/GroupBy/RangeSort/Sink workers
-  engine.py      tick-based pipelined executor, edges with RoutingTables,
+  engine.py      tick-based pipelined executor (optionally batching K
+                 ticks per super-chunk pass), edges with RoutingTables,
                  state-migration synchronization, controller attachment
   reference.py   pre-refactor tuple-at-a-time data plane (testing oracle)
   baselines.py   Flux and Flow-Join (paper §7.1 baselines)
@@ -21,7 +23,9 @@ from .exchange import (
     NumpyPartitionBackend,
     PallasPartitionBackend,
     PartitionBackend,
+    ScatterPlan,
     get_backend,
+    scatter_order,
 )
 from .state import AggStore, ScopeRows
 from .operators import (
@@ -47,9 +51,11 @@ __all__ = [
     "NumpyPartitionBackend",
     "PallasPartitionBackend",
     "PartitionBackend",
+    "ScatterPlan",
     "ScopeRows",
     "Source",
     "get_backend",
+    "scatter_order",
     "Filter",
     "GroupByAgg",
     "HashJoinBuild",

@@ -139,6 +139,13 @@ def restore(engine: Engine, snap: Dict) -> None:
         listener, e.routing.listener = e.routing.listener, None
         _restore_routing(e.routing, es["routing"])
         e.routing.listener = listener
+        # The restored table may carry splits/moves the destination never
+        # saw as a rewrite (listener suppressed): conservatively re-arm the
+        # owned/scattered mask if any arrival could land off-owner.
+        rt = e.routing
+        if ((np.count_nonzero(rt.weights, axis=1) > 1).any()
+                or not np.array_equal(rt.owner, rt.weights.argmax(axis=1))):
+            e.dst.may_scatter = True
         e.tuples_sent = es["tuples_sent"]
         e.exchange.sent_per_worker[:] = es["sent_per_worker"]
         e.units_moved = es["units_moved"]

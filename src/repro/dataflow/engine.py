@@ -30,9 +30,11 @@ the engine can restore and replay after an injected worker failure.
 
 Data plane
 ----------
-Every edge delegates chunk routing + scatter to the columnar exchange
-subsystem (:mod:`repro.dataflow.exchange`): one backend partition call
-(destinations + per-worker histogram) and one stable sort per chunk.  The
+Every edge delegates chunk routing to the fused columnar exchange
+subsystem (:mod:`repro.dataflow.exchange`): one backend call per chunk
+returns a :class:`~repro.dataflow.exchange.ScatterPlan` — destinations,
+per-worker histogram, and a stable destination-grouping placement — so a
+send is a single partition→rank→scatter pass with no separate sort.  The
 partition backend — ``"numpy"`` (default) or ``"pallas"`` (the TPU
 exchange kernel; bit-identical destinations) — is chosen per engine via
 ``Engine(partition_backend=...)`` or globally via the
@@ -40,6 +42,23 @@ exchange kernel; bit-identical destinations) — is chosen per engine via
 ``Engine(reference=True)`` swaps in the pre-refactor tuple-at-a-time
 oracle (:mod:`repro.dataflow.reference`) for equivalence tests and
 benchmark baselines.
+
+Batched tick scheduler
+----------------------
+``Engine(batch_ticks=K)`` fuses up to K consecutive ticks into one
+*super-tick*: one source emission of ``K * emit_rate`` tuples, one
+``K * service_rate`` queue pop + process + exchange send per operator —
+per-chunk Python dispatch, partition and scatter costs amortize K-fold
+while the data-plane arithmetic is unchanged.  Fusion never crosses a
+result or control boundary: a window always ends at (or before) the next
+``Sink.snapshot_every`` tick, the next controller metric-collection tick
+and the next pending control-message delivery tick, so the user-visible
+result cadence and the control plane observe the same tick grid as the
+per-tick scheduler.  Within a window, controllers and sink snapshots are
+stepped through every covered tick in order (interior ticks are no-ops by
+construction of the window).  The schedule depends only on configuration,
+so runs are bit-identical across the reference / numpy / pallas planes
+for a given ``batch_ticks``.
 """
 from __future__ import annotations
 
@@ -73,11 +92,13 @@ class Source:
     def remaining(self) -> int:
         return int(self.keys.size - self.pos)
 
-    def emit(self) -> Optional[Chunk]:
+    def emit(self, ticks: int = 1) -> Optional[Chunk]:
+        """Emit up to ``ticks * emit_rate`` tuples as one contiguous chunk
+        (bit-identical to ``ticks`` consecutive single-tick emissions)."""
         if self.pos >= self.keys.size:
             self.finished = True
             return None
-        end = min(self.pos + self.emit_rate, self.keys.size)
+        end = min(self.pos + ticks * self.emit_rate, self.keys.size)
         chunk = (self.keys[self.pos:end], self.vals[self.pos:end])
         self.pos = end
         if self.pos >= self.keys.size:
@@ -130,6 +151,9 @@ class Edge:
     # ---- state-migration synchronization (paper §5, Fig. 10) ---------- #
     def _on_rewrite(self, keys: List[int], old_rows: np.ndarray, new_rows: np.ndarray) -> None:
         op = self.dst
+        # From now on arrivals may land off-owner: stateful operators must
+        # run the owned/scattered mask (skipped pre-rewrite, hash init).
+        op.may_scatter = True
         strategy = self.strategy
         if strategy is None:
             # No controller: infer from mutability (Fig. 10 defaults).
@@ -228,13 +252,17 @@ class Engine:
     ``partition_backend`` selects the exchange backend for every edge
     (``"numpy"`` | ``"pallas"`` | a PartitionBackend instance | None for
     the REPRO_PARTITION_BACKEND env default); ``reference=True`` runs the
-    pre-refactor tuple-at-a-time data plane instead (testing oracle).
+    pre-refactor tuple-at-a-time data plane instead (testing oracle);
+    ``batch_ticks=K`` enables the batched tick scheduler (see module
+    docstring) — ``run`` fuses up to K ticks per super-chunk pass, never
+    crossing a sink-snapshot or controller boundary.
     """
 
     def __init__(self, *, partition_backend: BackendSpec = None,
-                 reference: bool = False):
+                 reference: bool = False, batch_ticks: int = 1):
         self.partition_backend = partition_backend
         self.reference = bool(reference)
+        self.batch_ticks = max(1, int(batch_ticks))
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []
@@ -273,6 +301,7 @@ class Engine:
         **kwargs,
     ):
         edge = self._in_edge(op)
+        op.track_key_stats = True      # arm the per-chunk metric fold
         adapter = EngineAdapter(self, op, edge)
         controller = controller_cls(adapter, cfg, **kwargs)
         edge.strategy = getattr(controller, "strategy", None)
@@ -305,20 +334,36 @@ class Engine:
         return left
 
     def run_tick(self) -> None:
-        t = self.tick
-        # 1. sources emit
+        """One engine tick (the per-tick scheduler; == run_super_tick(1))."""
+        self.run_super_tick(1)
+
+    def run_super_tick(self, k: int) -> None:
+        """Advance ``k`` fused ticks with one super-chunk pass per operator.
+
+        Data plane: one source emission of ``k * emit_rate`` tuples, one
+        ``k * service_rate`` pop + process + exchange send per operator
+        (topo order, so upstream super-output is visible downstream within
+        the same window — pipelining at window granularity).  Control
+        plane: END propagation once at the window end, then controllers
+        and the sink snapshot are stepped through every covered tick in
+        order; callers must pick ``k`` via :meth:`_fusible_ticks` so no
+        interior tick carries a control or snapshot event.
+        """
+        t0 = self.tick
+        # 1. sources emit (one contiguous chunk == k per-tick emissions)
         for src in self.sources:
             if not src.finished:
-                chunk = src.emit()
+                chunk = src.emit(k)
                 if chunk is not None and src.out_edge is not None:
                     src.out_edge.send(chunk)
         # 2. operators process (topo order; outputs visible downstream now).
-        # A tick's output chunks (one per emitting worker) ride a single
-        # exchange send: one partition + one scatter per operator per tick.
+        # A window's output chunks (one per emitting worker) ride a single
+        # exchange send: one fused partition + scatter per operator per
+        # super-tick.
         for op in self.ops:
             if op.finished:
                 continue
-            outs = op.tick()
+            outs = op.tick(k * op.service_rate)
             if outs and op.out_edge is not None:
                 op.out_edge.send(outs[0] if len(outs) == 1 else concat(outs))
         # 3. END propagation
@@ -331,14 +376,53 @@ class Engine:
                 if outs and op.out_edge is not None:
                     op.out_edge.send(outs[0] if len(outs) == 1
                                      else concat(outs))
-        # 4. controllers
-        for att in self.controllers:
-            if not att.op.finished:
-                att.controller.step(t)
-        # 5. sink snapshot
+        # 4 + 5. controllers and sink snapshot, through every covered tick
+        # (interior ticks are no-ops when k came from _fusible_ticks).
+        for t in range(t0, t0 + k):
+            for att in self.controllers:
+                if not att.op.finished:
+                    att.controller.step(t)
+            if self.sink is not None:
+                self.sink.snapshot(t)
+        self.tick = t0 + k
+
+    def _fusible_ticks(self, horizon: int) -> int:
+        """Width of the next fused window, starting at the current tick.
+
+        Bounded by ``horizon`` and by the next control/result boundary —
+        the earliest tick at which the sink snapshots, any attached
+        controller collects metrics, or a pending control message becomes
+        deliverable.  A boundary tick may only be the *last* tick of a
+        window (its event runs at the window end, exactly where the
+        per-tick scheduler would run it after that tick's data pass).
+        """
+        if horizon <= 1:
+            return 1
+        t0 = self.tick
+        nxt = t0 + horizon - 1          # latest admissible window end
         if self.sink is not None:
-            self.sink.snapshot(t)
-        self.tick += 1
+            every = int(self.sink.snapshot_every)
+            if every > 0:
+                nxt = min(nxt, t0 + (-t0) % every)
+        for att in self.controllers:
+            if att.op.finished:
+                continue
+            ctrl = att.controller
+            if getattr(ctrl, "fired", False):
+                continue                # one-shot controller already fired
+            cfg = getattr(ctrl, "cfg", None)
+            if cfg is None:             # unknown cadence: stay tick-exact
+                return 1
+            period = max(1, int(getattr(cfg, "metric_period", 1)))
+            delay = int(getattr(cfg, "initial_delay_ticks", 0))
+            # First actionable tick (FlowJoin defers past its detection
+            # sample); the metric grid stays phased on `delay`.
+            start = max(t0, delay + int(getattr(ctrl, "detect_ticks", 0)))
+            nxt = min(nxt, start + (delay - start) % period)
+            pending = [p.apply_at for p in getattr(ctrl, "_pending", ())]
+            if pending:
+                nxt = min(nxt, max(t0, min(pending)))
+        return max(1, nxt - t0 + 1)
 
     def _producer_done(self, node) -> bool:
         return bool(node.finished)
@@ -348,7 +432,11 @@ class Engine:
 
     def run(self, max_ticks: int = 100_000) -> int:
         while not self.done() and self.tick < max_ticks:
-            self.run_tick()
+            if self.batch_ticks == 1:
+                self.run_super_tick(1)
+            else:
+                self.run_super_tick(self._fusible_ticks(
+                    min(self.batch_ticks, max_ticks - self.tick)))
         if self.done() and self.ticks_to_finish is None:
             self.ticks_to_finish = self.tick
         return self.tick

@@ -43,6 +43,13 @@ from .state import AggStore, ScopeRows, segment_starts
 from .tuples import Chunk, WorkerQueue, first_col
 
 
+#: Key-stats fold crossover: a chunk with fewer than ``num_keys / ratio``
+#: records updates arrival counts with scattered ``np.add.at`` instead of a
+#: dense ``np.bincount`` (which allocates and folds O(num_keys) regardless
+#: of chunk size).  Both are exact integer adds — results are identical.
+SPARSE_FOLD_RATIO = 16
+
+
 @dataclasses.dataclass
 class WorkerStats:
     processed_total: int = 0          # tuples consumed
@@ -84,9 +91,16 @@ class Operator:
         self.ended_inputs = 0           # END markers received
         self.expected_end_markers = 1   # one per upstream operator
         # Per-key arrival counts since the last metric collection
-        # (owner-attributed by the adapter).
+        # (owner-attributed by the adapter).  The fold is armed only when a
+        # controller attaches (`track_key_stats`): unmonitored operators
+        # skip the per-chunk O(n) stats pass entirely.
         self.arrived_by_key: Optional[np.ndarray] = None
         self.key_arrivals_total: Optional[np.ndarray] = None
+        self.track_key_stats = False
+        # Flipped by the input edge on its first routing rewrite: until
+        # then every arrival is owner-routed by construction (hash init),
+        # so stateful operators skip the per-chunk owned/scattered mask.
+        self.may_scatter = False
         # Shared view of the input edge's RoutingTable.owner array: the
         # pre-mitigation primary of every scope. Mutable ops use it to
         # classify arrivals as owned vs scattered (paper §5.4).
@@ -119,28 +133,65 @@ class Operator:
 
     def receive(self, wid: int, keys: np.ndarray, vals: np.ndarray) -> None:
         self.workers[wid].queue.push(keys, vals)
-        if self.arrived_by_key is not None and keys.size:
+        self._fold_key_stats(keys)
+
+    def _fold_key_stats(self, keys: np.ndarray) -> None:
+        """One key-stats update per chunk (armed by ``track_key_stats``):
+        dense ``bincount`` (O(num_keys) allocation + fold) for ordinary
+        chunks, scattered ``np.add.at`` when the chunk is tiny relative to
+        the key space so wide key spaces never pay O(num_keys) per chunk."""
+        if (not self.track_key_stats or self.arrived_by_key is None
+                or not keys.size):
+            return
+        if keys.size * SPARSE_FOLD_RATIO < self.arrived_by_key.size:
             np.add.at(self.arrived_by_key, keys, 1)
             np.add.at(self.key_arrivals_total, keys, 1)
-
-    def receive_sorted(self, keys: np.ndarray, vals: np.ndarray,
-                       bounds: np.ndarray) -> None:
-        """Scatter a destination-sorted chunk: worker w gets the slice
-        ``[bounds[w], bounds[w+1])``.  One key-stats update per chunk."""
-        for w in range(self.num_workers):
-            a, b = int(bounds[w]), int(bounds[w + 1])
-            if b > a:
-                self.workers[w].queue.push(keys[a:b], vals[a:b])
-        if self.arrived_by_key is not None and keys.size:
+        else:
             bc = np.bincount(keys, minlength=self.arrived_by_key.size)
             self.arrived_by_key += bc
             self.key_arrivals_total += bc
 
-    def tick(self) -> List[Chunk]:
-        """Each worker consumes up to service_rate tuples; returns outputs."""
+    def receive_sorted(self, keys: np.ndarray, vals: np.ndarray,
+                       bounds: np.ndarray) -> None:
+        """Scatter a destination-grouped chunk: worker w gets the slice
+        ``[bounds[w], bounds[w+1])``."""
+        for w in range(self.num_workers):
+            a, b = int(bounds[w]), int(bounds[w + 1])
+            if b > a:
+                self.workers[w].queue.push(keys[a:b], vals[a:b])
+        self._fold_key_stats(keys)
+
+    def receive_scatter(self, keys: np.ndarray, vals: np.ndarray,
+                        plan) -> None:
+        """Fused delivery from the exchange: gather each worker's records
+        straight into its ring-buffer segment (``queue.alloc`` + one
+        ``np.take(..., out=...)`` per column) — the one-pass
+        partition→rank→scatter tail.  An identity plan (single live
+        destination) degenerates to one plain push of the whole chunk.
+        Equivalent record-for-record to ``receive_sorted`` on
+        ``plan.take``-grouped columns."""
+        order = plan.gather_indices()
+        if order is None:
+            self.workers[int(np.argmax(plan.hist))].queue.push(keys, vals)
+        else:
+            bounds = plan.bounds
+            for w in np.flatnonzero(plan.hist):
+                a, b = int(bounds[w]), int(bounds[w + 1])
+                kv, vv = self.workers[int(w)].queue.alloc(b - a, keys, vals)
+                np.take(keys, order[a:b], axis=0, out=kv)
+                np.take(vals, order[a:b], axis=0, out=vv)
+        self._fold_key_stats(keys)
+
+    def tick(self, budget: Optional[int] = None) -> List[Chunk]:
+        """Each worker consumes up to ``budget`` queued tuples (default one
+        tick's ``service_rate``; the batched scheduler passes a K-tick
+        super-chunk budget) and processes them in one pass; returns
+        outputs."""
+        if budget is None:
+            budget = self.service_rate
         outs: List[Chunk] = []
         for w in self.workers:
-            keys, vals = w.queue.pop(self.service_rate)
+            keys, vals = w.queue.pop(budget)
             if keys.size == 0:
                 continue
             w.stats.processed_total += int(keys.size)
@@ -224,6 +275,8 @@ class Filter(Operator):
 
     def process(self, worker, keys, vals):
         mask = self.predicate(keys, vals)
+        if mask.all():          # all-pass: forward the views, copy nothing
+            return keys, vals
         return keys[mask], vals[mask]
 
 
@@ -376,6 +429,9 @@ class GroupByAgg(Operator):
 
     def process(self, worker, keys, vals):
         v = first_col(vals)
+        if not self.may_scatter:    # no rewrite yet: all arrivals owned
+            worker.state.add_many(keys, v)
+            return None
         owned = self._owned_mask(worker, keys)
         if owned.all():
             worker.state.add_many(keys, v)

@@ -2,15 +2,16 @@
 
 The engine moves data in *chunks* -- parallel (keys, vals) numpy arrays --
 instead of tuple-at-a-time (DESIGN.md §3 "assumptions changed").  A worker's
-unprocessed queue is a chunk deque with O(1) amortized pop of any prefix;
-its length in tuples is the paper's workload metric phi.  Chunks arrive as
-contiguous destination-sorted slices from the exchange subsystem
-(:mod:`repro.dataflow.exchange`), so a push never copies.
+unprocessed queue is a contiguous ring buffer whose length in tuples is the
+paper's workload metric phi: ``push`` appends with a single copy into the
+backing arrays, and ``pop`` of *any* prefix -- one tick's ``service_rate``
+or a batched scheduler's K-tick super-chunk -- is zero-copy, returning
+views of the contiguous ``[head, head + n)`` span.  The old chunk-deque
+(pop = deque walk + concat per tick) is gone.
 """
 from __future__ import annotations
 
-import collections
-from typing import Deque, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -35,52 +36,111 @@ def concat(chunks) -> Chunk:
 
 
 class WorkerQueue:
-    """Unprocessed-data queue of one worker (the phi metric source)."""
+    """Unprocessed-data queue of one worker (the phi metric source).
 
-    __slots__ = ("_chunks", "_size", "received_total")
+    A contiguous ring buffer over two backing arrays (keys, vals).  Pushes
+    copy into ``[tail, tail + n)``; pops advance ``head`` and return
+    *views* -- zero-copy, no concatenation.  When the tail hits capacity
+    the consumed prefix is recycled: the live span is compacted to the
+    front when at least half the buffer is slack, else the buffer doubles
+    (amortized O(1) per tuple either way).
+
+    Aliasing contract: a popped view stays valid until the next ``push``
+    to the *same* queue.  The engine upholds this by construction -- every
+    pop is fully consumed (processed, with outputs re-materialized by the
+    exchange gather) before its queue can receive again; checkpointing
+    uses ``snapshot`` (a copy) rather than pops.
+    """
+
+    __slots__ = ("_keys", "_vals", "_head", "_tail", "received_total")
+
+    _MIN_CAPACITY = 256
 
     def __init__(self) -> None:
-        self._chunks: Deque[Chunk] = collections.deque()
-        self._size = 0
+        self._keys: Optional[np.ndarray] = None
+        self._vals: Optional[np.ndarray] = None
+        self._head = 0
+        self._tail = 0
         self.received_total = 0  # sigma_w: lifetime tuples received
 
     def __len__(self) -> int:
-        return self._size
+        return self._tail - self._head
+
+    def _reserve(self, n: int, keys: np.ndarray, vals: np.ndarray) -> None:
+        if self._keys is None:
+            cap = max(self._MIN_CAPACITY, 2 * n)
+            self._keys = np.empty(cap, dtype=keys.dtype)
+            self._vals = np.empty((cap,) + vals.shape[1:], dtype=vals.dtype)
+            return
+        if vals.shape[1:] != self._vals.shape[1:]:
+            raise ValueError(
+                f"payload width changed mid-queue: buffer holds "
+                f"{self._vals.shape[1:]}, push has {vals.shape[1:]}")
+        cap = self._keys.shape[0]
+        if self._tail + n <= cap:
+            return
+        live = self._tail - self._head
+        if live + n <= cap // 2:
+            # Recycle the consumed prefix (the ring wrap, kept contiguous).
+            self._keys[:live] = self._keys[self._head:self._tail]
+            self._vals[:live] = self._vals[self._head:self._tail]
+        else:
+            cap = max(2 * (live + n), self._MIN_CAPACITY)
+            keys_new = np.empty(cap, dtype=self._keys.dtype)
+            vals_new = np.empty((cap,) + self._vals.shape[1:],
+                                dtype=self._vals.dtype)
+            keys_new[:live] = self._keys[self._head:self._tail]
+            vals_new[:live] = self._vals[self._head:self._tail]
+            self._keys, self._vals = keys_new, vals_new
+        self._head, self._tail = 0, live
 
     def push(self, keys: np.ndarray, vals: np.ndarray) -> None:
         n = keys.shape[0]
         if n == 0:
             return
-        self._chunks.append((keys, vals))
-        self._size += n
+        self._reserve(n, keys, vals)
+        t = self._tail
+        self._keys[t:t + n] = keys
+        self._vals[t:t + n] = vals
+        self._tail = t + n
         self.received_total += n
 
+    def alloc(self, n: int, keys_like: np.ndarray,
+              vals_like: np.ndarray) -> Chunk:
+        """Reserve the next ``n`` slots and return them as writable views.
+
+        The fused exchange gathers each worker's records straight into the
+        returned segments (``np.take(..., out=view)``), skipping the
+        intermediate grouped array a ``push`` would copy from.  The
+        ``*_like`` arrays only donate dtype and payload width.  The caller
+        must fill the views before the queue is read.
+        """
+        self._reserve(n, keys_like, vals_like)
+        t = self._tail
+        self._tail = t + n
+        self.received_total += n
+        return self._keys[t:t + n], self._vals[t:t + n]
+
     def pop(self, n: int) -> Chunk:
-        """Remove and return up to n tuples from the head."""
-        if n <= 0 or self._size == 0:
+        """Remove and return up to n tuples from the head (zero-copy views)."""
+        got = min(int(n), self._tail - self._head)
+        if got <= 0:
             return empty_chunk()
-        out = []
-        got = 0
-        while self._chunks and got < n:
-            keys, vals = self._chunks[0]
-            take = min(keys.shape[0], n - got)
-            if take == keys.shape[0]:
-                out.append(self._chunks.popleft())
-            else:
-                out.append((keys[:take], vals[:take]))
-                self._chunks[0] = (keys[take:], vals[take:])
-            got += take
-        self._size -= got
-        return concat(out)
+        h = self._head
+        self._head = h + got
+        return self._keys[h:h + got], self._vals[h:h + got]
 
     def snapshot(self) -> Chunk:
         """Copy of the queue contents (for checkpointing)."""
-        return concat(list(self._chunks))
+        if self._keys is None or self._head == self._tail:
+            return empty_chunk()
+        return (self._keys[self._head:self._tail].copy(),
+                self._vals[self._head:self._tail].copy())
 
     def restore(self, chunk: Chunk, received_total: int) -> None:
-        self._chunks.clear()
-        self._size = 0
+        self._keys = None
+        self._vals = None
+        self._head = self._tail = 0
         if chunk[0].size:
-            self._chunks.append((chunk[0].copy(), chunk[1].copy()))
-            self._size = int(chunk[0].size)
+            self.push(np.asarray(chunk[0]), np.asarray(chunk[1]))
         self.received_total = received_total

@@ -23,8 +23,9 @@ from .engine import Edge, Engine, Source
 from .operators import Filter, GroupByAgg, HashJoinProbe, Operator, Project, RangeSort, Sink
 
 
-def _engine(reference: bool, partition_backend) -> Engine:
-    return Engine(partition_backend=partition_backend, reference=reference)
+def _engine(reference: bool, partition_backend, batch_ticks: int = 1) -> Engine:
+    return Engine(partition_backend=partition_backend, reference=reference,
+                  batch_ticks=batch_ticks)
 
 
 def _op_cls(cls, reference: bool):
@@ -75,18 +76,20 @@ def build_w1(
     seed: int = 0,
     reference: bool = False,
     partition_backend=None,
+    batch_ticks: int = 1,
+    snapshot_every: int = 1,
 ) -> Workflow:
     keys, vals = datasets.tweets_stream(scale, seed)
     nkeys = datasets.NUM_LOCATIONS
     emit_rate = num_workers * service_rate          # join is the bottleneck
 
-    eng = _engine(reference, partition_backend)
+    eng = _engine(reference, partition_backend, batch_ticks)
     src = eng.add_source(Source("tweets", keys, vals, emit_rate))
     filt = eng.add_op(Filter("filter", num_workers, emit_rate,
                              predicate=lambda k, v: np.ones(k.shape, dtype=bool)))
     join = eng.add_op(_op_cls(HashJoinProbe, reference)(
         "join", num_workers, service_rate))
-    sink = eng.add_op(Sink("viz", nkeys))
+    sink = eng.add_op(Sink("viz", nkeys, snapshot_every=snapshot_every))
 
     eng.connect(src, filt, nkeys)
     join_edge = eng.connect(filt, join, nkeys)
@@ -133,12 +136,14 @@ def build_w2(
     seed: int = 1,
     reference: bool = False,
     partition_backend=None,
+    batch_ticks: int = 1,
+    snapshot_every: int = 1,
 ) -> Workflow:
     spec = datasets.DsbSpec()
     dates, items, custs, vals = datasets.dsb_sales(n_tuples, spec, seed)
     emit_rate = num_workers * service_rate
 
-    eng = _engine(reference, partition_backend)
+    eng = _engine(reference, partition_backend, batch_ticks)
     # vals columns: [item, customer, amount] so downstream re-keys by item.
     payload = np.stack([items.astype(np.float64), custs.astype(np.float64), vals], axis=1)
     src = eng.add_source(Source("sales", dates, payload, emit_rate))
@@ -150,7 +155,7 @@ def build_w2(
     join_item = eng.add_op(_join("join_item", num_workers, service_rate))
     grp = eng.add_op(_op_cls(GroupByAgg, reference)(
         "groupby_item", num_workers, emit_rate))
-    sink = eng.add_op(Sink("viz", spec.num_items))
+    sink = eng.add_op(Sink("viz", spec.num_items, snapshot_every=snapshot_every))
 
     e_date = eng.connect(src, join_date, spec.num_dates)
     eng.connect(join_date, rekey, spec.num_dates)
@@ -191,6 +196,8 @@ def build_w3(
     seed: int = 2,
     reference: bool = False,
     partition_backend=None,
+    batch_ticks: int = 1,
+    snapshot_every: int = 1,
 ) -> Workflow:
     prices = datasets.tpch_orders(n_tuples, seed)
     bounds = datasets.price_ranges(num_workers * 2)   # 2 ranges per worker
@@ -198,11 +205,11 @@ def build_w3(
     nranges = num_workers * 2
     emit_rate = num_workers * service_rate
 
-    eng = _engine(reference, partition_backend)
+    eng = _engine(reference, partition_backend, batch_ticks)
     src = eng.add_source(Source("orders", rids, prices, emit_rate))
     sort = eng.add_op(_op_cls(RangeSort, reference)(
         "sort", num_workers, service_rate))
-    sink = eng.add_op(Sink("out", nranges))
+    sink = eng.add_op(Sink("out", nranges, snapshot_every=snapshot_every))
 
     e_sort = eng.connect(src, sort, nranges)
     eng.connect(sort, sink, nranges)
@@ -228,16 +235,18 @@ def build_w4(
     seed: int = 3,
     reference: bool = False,
     partition_backend=None,
+    batch_ticks: int = 1,
+    snapshot_every: int = 1,
 ) -> Workflow:
     num_keys = 42
     keys, vals = datasets.synthetic_changing(n_tuples, num_keys, seed)
     emit_rate = num_workers * service_rate
 
-    eng = _engine(reference, partition_backend)
+    eng = _engine(reference, partition_backend, batch_ticks)
     src = eng.add_source(Source("synthetic", keys, vals, emit_rate))
     join = eng.add_op(_op_cls(HashJoinProbe, reference)(
         "join", num_workers, service_rate))
-    sink = eng.add_op(Sink("viz", num_keys))
+    sink = eng.add_op(Sink("viz", num_keys, snapshot_every=snapshot_every))
 
     e = eng.connect(src, join, num_keys)
     eng.connect(join, sink, num_keys)

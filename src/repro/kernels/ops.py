@@ -48,6 +48,19 @@ def partition(keys, counters, weights, cdf=None, *, block_n: int = 1024):
                            block_n=block_n, interpret=_default_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def partition_scatter(keys, counters, weights, cdf=None, *,
+                      block_n: int = 1024):
+    """Fused exchange: (dest [N], within-destination rank [N], hist [W]).
+
+    The rank output turns the scatter into a fancy-index placement at
+    ``exclusive_cumsum(hist)[dest] + rank`` — no host sort.
+    """
+    return _part.partition_scatter(keys, counters, weights, cdf=cdf,
+                                   block_n=block_n,
+                                   interpret=_default_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
 def segment_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
                    block_k: int = 128):

@@ -1,9 +1,15 @@
-"""Pallas TPU kernel for the routing-table partition (dataflow exchange).
+"""Pallas TPU kernels for the routing-table partition (dataflow exchange).
 
 The paper's data plane hot spot: given a chunk of record keys, the current
 row-stochastic routing table (the partition function Reshape rewrites) and
 per-key running counters, compute each record's destination worker and the
 per-worker histogram (the workload metric phi feeding skew detection).
+:func:`partition_scatter` additionally emits each record's
+*within-destination rank* (its arrival index among same-destination
+records) from the same VMEM-scratch running per-worker counters that
+accumulate the histogram, so the host exchange can place every record at
+``cumsum(hist)[dest] + rank`` with one vectorized add — the full
+partition→rank→scatter pipeline in a single kernel pass, no host sort.
 
 TPU adaptation of a hash-exchange: instead of per-tuple pointer chasing,
 destinations come from an inverse-CDF lookup (records x workers compare —
@@ -116,3 +122,97 @@ def partition(
         interpret=interpret,
     )(keys, counters, cdf.astype(jnp.float32))
     return dest[:N], hist[0]
+
+
+def _partition_scatter_kernel(keys_ref, counters_ref, cdf_ref, dest_ref,
+                              rank_ref, hist_ref, hist_acc, *, bn: int,
+                              n_workers: int, n_blocks: int, n_valid: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_acc[...] = jnp.zeros_like(hist_acc)
+
+    keys = keys_ref[...]                                 # [bn]
+    u = ld_thresholds(counters_ref[...])                 # [bn] in [0, 1)
+    rows = cdf_ref[keys]                                 # [bn, W] gather
+    dest = jnp.sum(u[:, None] >= rows, axis=1).astype(jnp.int32)
+    dest = jnp.minimum(dest, n_workers - 1)
+    dest_ref[...] = dest
+    onehot = (dest[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 1))
+    # Mask padded lanes (global index >= n_valid): they must advance
+    # neither the histogram nor any later record's rank.
+    idx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 0)
+    onehot = jnp.where(idx < n_valid, onehot, False).astype(jnp.int32)
+    # rank = per-worker count carried in from earlier blocks (the running
+    # VMEM counters) + exclusive within-block prefix, read off at each
+    # record's own destination column via the one-hot row.
+    prev = hist_acc[...]                                 # [1, W]
+    within = jnp.cumsum(onehot, axis=0) - onehot         # exclusive prefix
+    rank_ref[...] = ((within + prev) * onehot).sum(axis=1)
+    hist_acc[...] = prev + onehot.sum(axis=0, keepdims=True)
+
+    @pl.when(i == n_blocks - 1)
+    def _finish():
+        hist_ref[...] = hist_acc[...]
+
+
+def partition_scatter(
+    keys: jnp.ndarray,              # [N] int32
+    counters: jnp.ndarray,          # [N] int32 per-key running index
+    weights: jnp.ndarray,           # [K, W] row-stochastic routing table
+    *,
+    cdf: Optional[jnp.ndarray] = None,   # [K, W] float32 row-CDF override
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused exchange: (dest [N], rank [N], histogram [W]) — all int32.
+
+    ``rank[i]`` is record *i*'s arrival index among the chunk's records
+    with the same destination (``#{j < i : dest[j] == dest[i]}``), so the
+    stable destination-grouped position of record *i* is
+    ``exclusive_cumsum(hist)[dest[i]] + rank[i]`` — equivalent to a stable
+    sort by destination without sorting.  Destinations and histogram are
+    bit-identical to :func:`partition`; padding as there.
+    """
+    N = keys.shape[0]
+    K, W = weights.shape
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    if N == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((W,), jnp.int32))
+    keys = keys.astype(jnp.int32)
+    counters = counters.astype(jnp.int32)
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        keys = jnp.concatenate([keys, jnp.zeros((pad,), jnp.int32)])
+        counters = jnp.concatenate([counters, jnp.zeros((pad,), jnp.int32)])
+    n_blocks = (N + pad) // bn
+
+    kernel = functools.partial(_partition_scatter_kernel, bn=bn, n_workers=W,
+                               n_blocks=n_blocks, n_valid=N)
+    dest, rank, hist = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((K, W), lambda i: (0, 0)),      # resident table
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((N + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, W), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.int32)],
+        interpret=interpret,
+    )(keys, counters, cdf.astype(jnp.float32))
+    return dest[:N], rank[:N], hist[0]

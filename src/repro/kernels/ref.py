@@ -77,6 +77,21 @@ def partition(keys: jnp.ndarray, counters: jnp.ndarray,
     return dest, hist
 
 
+def partition_scatter(keys: jnp.ndarray, counters: jnp.ndarray,
+                      weights: jnp.ndarray, cdf: jnp.ndarray = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused-exchange oracle: (dest [N], rank [N], histogram [W]).
+
+    ``rank`` is each record's within-destination arrival index
+    (:func:`repro.core.ops.within_dest_ranks`), so a stable
+    destination-grouping is ``exclusive_cumsum(hist)[dest] + rank``.
+    """
+    from ..core.ops import within_dest_ranks
+
+    dest, hist = partition(keys, counters, weights, cdf)
+    return dest, within_dest_ranks(dest, weights.shape[1]), hist
+
+
 def segment_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped expert matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),

@@ -5,13 +5,20 @@ Covers the acceptance contract of the exchange refactor:
   * numpy and Pallas partition backends produce identical destinations and
     histograms, including after routing rewrites and for chunk sizes that
     are not block multiples (internal padding);
+  * the fused one-pass scatter (partition→rank→placement) is *stable*:
+    every backend's ScatterPlan reproduces the legacy stable
+    ``argsort(dest)`` grouping bit for bit across random routing tables,
+    split keys and odd-sized tail chunks (property test);
   * record splits conserve exactly: every record lands on exactly one
     worker, per-worker receipts equal the backend histograms, and a key's
     split tracks its routing fractions within the low-discrepancy bound —
     also across a mid-stream rewrite;
   * the engine end-to-end is a behavioral no-op versus the pre-refactor
     tuple-at-a-time oracle: bit-identical ``Sink.series`` on skewed
-    workloads under every strategy/operator family;
+    workloads under every strategy/operator family — per-tick and under
+    the batched tick scheduler (``Engine(batch_ticks=K)``);
+  * the ring-buffer WorkerQueue keeps FIFO semantics with zero-copy pops
+    and checkpoint snapshot/restore round-trips;
   * array-backed keyed state keeps the old mapping semantics (migration,
     scattered merge, checkpoint deepcopy).
 """
@@ -20,14 +27,17 @@ import copy
 import numpy as np
 import pytest
 
+from _propcheck import given, settings, st
 from repro.core.partitioner import RoutingTable, ld_thresholds, routing_cdf32
 from repro.dataflow import build_w1, build_w2, build_w3
 from repro.dataflow.exchange import (
     Exchange,
     NumpyPartitionBackend,
     get_backend,
+    scatter_order,
 )
 from repro.dataflow.state import AggStore, ScopeRows
+from repro.dataflow.tuples import WorkerQueue
 
 
 def _rt_with_splits(num_keys=12, num_workers=6):
@@ -205,6 +215,189 @@ class TestExchangeConservation:
 
 
 # --------------------------------------------------------------------- #
+# Fused one-pass scatter: stability property vs the legacy stable sort    #
+# --------------------------------------------------------------------- #
+def _random_rewrites(rt, rng, rounds):
+    """Apply a few random SBK moves / SBR splits (possibly none)."""
+    for _ in range(rounds):
+        k = int(rng.integers(0, rt.num_keys))
+        m = min(rt.num_workers, int(rng.integers(1, 4)))
+        ws = rng.choice(rt.num_workers, size=m, replace=False)
+        if ws.size == 1:
+            rt.move_key(k, int(ws[0]))
+        else:
+            rt.split_key(k, [int(w) for w in ws], rng.dirichlet(np.ones(m)))
+
+
+class TestFusedScatterStability:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_plan_matches_stable_argsort_oracle(self, seed):
+        """The fused counting scatter preserves per-worker arrival order:
+        for random routing tables (split keys included) and odd-sized tail
+        chunks, the ScatterPlan grouping is bit-identical to the legacy
+        ``argsort(dest, kind="stable")`` scatter."""
+        rng = np.random.default_rng(seed)
+        num_keys = int(rng.integers(1, 40))
+        num_workers = int(rng.integers(1, 12))
+        rt = RoutingTable(num_keys, num_workers)
+        _random_rewrites(rt, rng, int(rng.integers(0, 4)))
+        be = get_backend("numpy")
+        for n in (int(rng.integers(1, 2000)), 1, 37):   # odd tails included
+            keys = rng.integers(0, num_keys, n).astype(np.int64)
+            vals = np.arange(n, dtype=np.float64)       # stream position
+            plan = be.partition_scatter(rt, keys)
+            # independent oracle: numpy's comparison stable sort on int64
+            order = np.argsort(plan.dest, kind="stable")
+            np.testing.assert_array_equal(plan.take(keys), keys[order])
+            np.testing.assert_array_equal(plan.take(vals), vals[order])
+            np.testing.assert_array_equal(
+                plan.hist, np.bincount(plan.dest, minlength=num_workers))
+            np.testing.assert_array_equal(plan.bounds,
+                                          np.r_[0, np.cumsum(plan.hist)])
+            # per-worker arrival order strictly increases (stability)
+            g = plan.take(vals)
+            for w in range(num_workers):
+                a, b = int(plan.bounds[w]), int(plan.bounds[w + 1])
+                assert np.all(np.diff(g[a:b]) > 0)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_pallas_rank_scatter_matches_numpy(self, seed):
+        pytest.importorskip("jax")
+        rng = np.random.default_rng(seed)
+        rt_np, rt_pl = _rt_with_splits(), _rt_with_splits()
+        be_np = get_backend("numpy")
+        be_pl = get_backend("pallas")
+        be_pl.block_n = 128                 # force multi-block rank carry
+        for n in (int(rng.integers(1, 700)), 128, 129):
+            keys = rng.integers(0, rt_np.num_keys, n).astype(np.int64)
+            vals = np.arange(n, dtype=np.float64)
+            p1 = be_np.partition_scatter(rt_np, keys)
+            p2 = be_pl.partition_scatter(rt_pl, keys)
+            np.testing.assert_array_equal(p1.dest, p2.dest)
+            np.testing.assert_array_equal(p1.hist, p2.hist)
+            np.testing.assert_array_equal(p1.take(keys), p2.take(keys))
+            np.testing.assert_array_equal(p1.take(vals), p2.take(vals))
+
+    def test_identity_fast_path_single_destination(self):
+        rt = RoutingTable(4, 1)             # every record to worker 0
+        be = get_backend("numpy")
+        keys = np.array([2, 1, 1, 3, 0], dtype=np.int64)
+        plan = be.partition_scatter(rt, keys)
+        assert plan.order is None and plan.pos is None
+        assert plan.take(keys) is keys      # zero-copy
+        assert plan.gather_indices() is None
+
+    def test_radix_cast_guarded_beyond_int16(self):
+        """num_workers beyond int16 must not wrap around silently: the
+        wide fallback still groups correctly."""
+        hist = np.zeros(40_000, dtype=np.int64)
+        dest = np.array([39_999, 5, 39_999, 0], dtype=np.int64)
+        hist[39_999], hist[5], hist[0] = 2, 1, 1
+        order = scatter_order(dest, hist)
+        np.testing.assert_array_equal(dest[order], [0, 5, 39_999, 39_999])
+        np.testing.assert_array_equal(order, [3, 1, 0, 2])
+
+
+# --------------------------------------------------------------------- #
+# Ring-buffer WorkerQueue: FIFO, zero-copy pops, checkpoint round-trip    #
+# --------------------------------------------------------------------- #
+class TestWorkerQueue:
+    def test_fifo_across_growth_and_compaction(self):
+        q = WorkerQueue()
+        expect = []
+        rng = np.random.default_rng(0)
+        got = []
+        for i in range(200):
+            n = int(rng.integers(1, 50))
+            keys = rng.integers(0, 100, n).astype(np.int64)
+            q.push(keys, keys.astype(np.float64))
+            expect.extend(keys.tolist())
+            k, _ = q.pop(int(rng.integers(0, 40)))
+            got.extend(k.tolist())
+        k, _ = q.pop(len(q))
+        got.extend(k.tolist())
+        assert got == expect
+        assert len(q) == 0 and q.received_total == len(expect)
+
+    def test_pop_is_zero_copy_view(self):
+        q = WorkerQueue()
+        q.push(np.arange(10, dtype=np.int64), np.ones(10))
+        k, v = q.pop(4)
+        assert np.shares_memory(k, q._keys) and np.shares_memory(v, q._vals)
+        np.testing.assert_array_equal(k, np.arange(4))
+
+    def test_alloc_segments_are_writable_queue_slots(self):
+        q = WorkerQueue()
+        template_k = np.zeros(0, dtype=np.int64)
+        template_v = np.zeros((0, 3))
+        kv, vv = q.alloc(5, template_k, template_v)
+        kv[:] = np.arange(5)
+        vv[:] = 7.0
+        assert len(q) == 5 and q.received_total == 5
+        k, v = q.pop(5)
+        np.testing.assert_array_equal(k, np.arange(5))
+        assert v.shape == (5, 3) and np.all(v == 7.0)
+
+    def test_snapshot_restore_roundtrip(self):
+        q = WorkerQueue()
+        q.push(np.arange(6, dtype=np.int64),
+               np.arange(12, dtype=np.float64).reshape(6, 2))
+        q.pop(2)
+        q.push(np.array([9], dtype=np.int64), np.array([[1.0, 2.0]]))
+        snap = q.snapshot()
+        q2 = WorkerQueue()
+        q2.restore(snap, q.received_total)
+        assert len(q2) == len(q) == 5 and q2.received_total == 7
+        np.testing.assert_array_equal(q2.pop(5)[0], [2, 3, 4, 5, 9])
+        # snapshot is a copy, not a view of the live buffer
+        assert not np.shares_memory(snap[0], q._keys)
+
+    def test_restore_empty(self):
+        q = WorkerQueue()
+        q.push(np.arange(3, dtype=np.int64), np.ones(3))
+        from repro.dataflow.tuples import empty_chunk
+        q.restore(empty_chunk(), 11)
+        assert len(q) == 0 and q.received_total == 11
+        k, v = q.pop(4)
+        assert k.size == 0
+
+
+# --------------------------------------------------------------------- #
+# Sparse key-stats fold (np.add.at below the chunk/num_keys threshold)    #
+# --------------------------------------------------------------------- #
+class TestKeyStatsFold:
+    def _op(self, num_keys):
+        from repro.dataflow.operators import Filter
+        op = Filter("f", 2, 8, predicate=lambda k, v: np.ones(k.size, bool))
+        op.ensure_key_stats(num_keys)
+        op.track_key_stats = True
+        return op
+
+    @pytest.mark.parametrize("num_keys", [64, 1_000_000])
+    def test_fold_paths_agree(self, num_keys):
+        """Tiny chunk into a wide key space takes the np.add.at path; a
+        dense chunk takes bincount — identical integer counts either way."""
+        op = self._op(num_keys)
+        keys = np.array([0, 5, 5, 63, 0], dtype=np.int64)
+        bounds = np.array([0, 3, 5], dtype=np.int64)
+        op.receive_sorted(keys, np.ones(5), bounds)
+        op.receive_sorted(keys, np.ones(5), bounds)
+        expect = np.zeros(num_keys, dtype=np.int64)
+        expect[[0, 5, 63]] = [4, 4, 2]
+        np.testing.assert_array_equal(op.arrived_by_key, expect)
+        np.testing.assert_array_equal(op.key_arrivals_total, expect)
+
+    def test_untracked_operator_skips_fold(self):
+        op = self._op(64)
+        op.track_key_stats = False
+        op.receive_sorted(np.array([1, 2], dtype=np.int64), np.ones(2),
+                          np.array([0, 1, 2], dtype=np.int64))
+        assert int(op.arrived_by_key.sum()) == 0
+
+
+# --------------------------------------------------------------------- #
 # End-to-end: behavioral no-op vs the pre-refactor oracle                 #
 # --------------------------------------------------------------------- #
 class TestEngineEquivalence:
@@ -257,6 +450,79 @@ class TestEngineEquivalence:
         for ea, eb in zip(a.engine.edges, b.engine.edges):
             np.testing.assert_array_equal(ea.sent_per_worker,
                                           eb.sent_per_worker)
+
+
+# --------------------------------------------------------------------- #
+# Batched tick scheduler: bit-identical across planes, boundary-aligned   #
+# --------------------------------------------------------------------- #
+class TestBatchedScheduler:
+    def _cfg(self, **kw):
+        from repro.core import ReshapeConfig
+        return ReshapeConfig(metric_period=3, **kw)
+
+    def _kw(self, **extra):
+        kw = dict(strategy="reshape", scale=0.02, num_workers=16,
+                  service_rate=4, batch_ticks=8, snapshot_every=4,
+                  cfg=self._cfg())
+        kw.update(extra)
+        return kw
+
+    def test_series_identical_across_planes_batched(self):
+        """Acceptance gate: Sink.series bit-identical across reference /
+        numpy / pallas with the batched scheduler enabled."""
+        ref = build_w1(reference=True, **self._kw())
+        ref.run()
+        new = build_w1(**self._kw())
+        new.run()
+        assert ref.engine.tick == new.engine.tick
+        assert _series_equal(ref.sink.series, new.sink.series)
+        np.testing.assert_array_equal(ref.sink.counts, new.sink.counts)
+        from repro.dataflow import datasets
+        np.testing.assert_array_equal(new.sink.counts,
+                                      datasets.tweet_counts(0.02))
+
+    def test_pallas_plane_batched_matches_numpy(self):
+        pytest.importorskip("jax")
+        kw = self._kw(scale=0.005, num_workers=6, batch_ticks=4,
+                      snapshot_every=2)
+        a = build_w1(**kw)
+        a.run()
+        b = build_w1(partition_backend="pallas", **kw)
+        b.run()
+        assert a.engine.tick == b.engine.tick
+        assert _series_equal(a.sink.series, b.sink.series)
+        for ea, eb in zip(a.engine.edges, b.engine.edges):
+            np.testing.assert_array_equal(ea.sent_per_worker,
+                                          eb.sent_per_worker)
+
+    def test_batched_respects_control_delay(self):
+        """Pending control messages clamp fusion: with a delivery delay
+        the batched planes still agree bit for bit."""
+        kw = self._kw(cfg=self._cfg(control_delay_ticks=7))
+        ref = build_w1(reference=True, **kw)
+        ref.run()
+        kw = self._kw(cfg=self._cfg(control_delay_ticks=7))
+        new = build_w1(**kw)
+        new.run()
+        assert ref.engine.tick == new.engine.tick
+        assert _series_equal(ref.sink.series, new.sink.series)
+
+    def test_snapshot_cadence_preserved_under_batching(self):
+        """Fusion never crosses a Sink.snapshot_every boundary: the series
+        tick grid is exactly the per-tick scheduler's grid."""
+        wf = build_w1(**self._kw())
+        wf.run()
+        ticks = [t for t, _ in wf.sink.series]
+        # every entry sits on the snapshot grid except the single END entry
+        assert sum(1 for t in ticks if t % 4 != 0) <= 1
+        assert ticks == sorted(ticks)
+
+    def test_batched_counts_match_unbatched(self):
+        base = build_w1(**self._kw(batch_ticks=1))
+        base.run()
+        batched = build_w1(**self._kw())
+        batched.run()
+        np.testing.assert_array_equal(base.sink.counts, batched.sink.counts)
 
 
 # --------------------------------------------------------------------- #
