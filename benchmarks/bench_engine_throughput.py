@@ -4,25 +4,33 @@ pipeline under the fused exchange + batched tick scheduler.
 Sweeps worker counts and chunk sizes (the per-tick service rate) over a
 zipf-skewed key stream and reports tuples/sec for:
 
-  reference  the pre-refactor tuple-at-a-time plane (dict state, per-worker
-             mask scatter) — the baseline everything is measured against
-  columnar   the PR-1 columnar plane: fused exchange, per-tick scheduler
-             (``batch_ticks=1``) — isolates the batched scheduler's gain
-  numpy      the full fused plane: numpy partition backend + batched tick
-             scheduler (``batch_ticks=BATCH`` super-chunk passes)
-  pallas     as ``numpy`` with the Pallas exchange kernel (interpret mode
-             off-TPU, so off-TPU numbers are a correctness demonstration,
-             not kernel speed)
+  reference   the pre-refactor tuple-at-a-time plane (dict state,
+              per-worker mask scatter) — the baseline
+  columnar    the PR-1 columnar plane: fused exchange, per-tick scheduler
+              (``batch_ticks=1``) — isolates the batched scheduler's gain
+  numpy       the full fused host plane: numpy partition backend + batched
+              tick scheduler (``batch_ticks=BATCH`` super-chunk passes)
+  pallas      the device-resident exchange plane
+              (:mod:`repro.dataflow.device`) at its auto-selected
+              executor: the fused jitted super-tick step on TPU, the
+              bit-identical host twin off TPU — so off-TPU rows measure
+              the plane architecture (same canonical routing rule, fused
+              super-tick structure), not XLA:CPU's serial scatter lowering
+  pallas_jit  the jitted device step *forced* off-TPU (short stream: every
+              super-tick really dispatches the donated-buffer XLA step,
+              interpret-style) — tracks the true device-plane code path's
+              off-TPU cost so its trajectory is visible PR over PR
 
 Every row's ``speedup_vs_reference`` is computed against a reference
-baseline timed at the *same* stream length (the pallas rows run a shorter
-stream to bound interpret-mode retraces, so they get their own same-``n``
-baseline rather than borrowing the full-length one).
+baseline timed at the *same* stream length (the pallas_jit rows run a
+shorter stream, so they get their own same-``n`` baseline).
 
-Acceptance bar for this refactor: ``numpy`` >= 2x ``columnar`` (and >=
-10x ``reference``) tuples/sec at chunk >= 512.  The table is persisted to
-``BENCH_engine_throughput.json`` at the repo root so future PRs can diff
-the perf trajectory.
+Acceptance bar for the device-resident plane (PR 3): ``pallas`` >= 100x
+the PR-2 pallas rows (which re-entered the Pallas interpreter per chunk:
+2,650 tuples/s at chunk=64) and within ~2x of ``numpy`` at chunk >= 512.
+The table is persisted to ``BENCH_engine_throughput.json`` at the repo
+root with provenance fields (git SHA, jax backend, UTC timestamp) so the
+perf trajectory is comparable across PRs.
 """
 from __future__ import annotations
 
@@ -35,15 +43,22 @@ import numpy as np
 from repro.dataflow.engine import Engine, Source
 from repro.dataflow.operators import Filter, GroupByAgg, Sink
 
+from . import common
 from .common import emit
 
 NUM_KEYS = 64
 ZIPF_A = 1.4
 BATCH = 8          # batched-scheduler window (and the sink snapshot cadence)
-PALLAS_N = 20_000  # interpret mode retraces per shape: keep the stream short
+PALLAS_JIT_N = 20_000   # forced-jit off-TPU: keep the stream short
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(REPO_ROOT, "BENCH_engine_throughput.json")
+
+
+def _all_pass(k, v):
+    """Module-level predicate: a stable identity keys the device plane's
+    jit trace cache, so repeated engine builds never retrace."""
+    return v >= 0
 
 
 def _stream(n: int, seed: int = 0):
@@ -54,13 +69,13 @@ def _stream(n: int, seed: int = 0):
 
 
 def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None,
-           batch_ticks=1):
+           batch_ticks=1, device_executor=None):
     keys, vals = _stream(n_tuples)
     eng = Engine(partition_backend=backend, reference=reference,
-                 batch_ticks=batch_ticks)
+                 batch_ticks=batch_ticks, device_executor=device_executor)
     src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
     filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
-                             predicate=lambda k, v: v >= 0))
+                             predicate=_all_pass))
     if reference:
         from repro.dataflow.reference import RefGroupByAgg as Grp
     else:
@@ -75,14 +90,12 @@ def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None,
     return eng, sink
 
 
-def _run_one(n_tuples, num_workers, chunk, *, reference=False, backend=None,
-             batch_ticks=1, reps=3):
+def _run_one(n_tuples, num_workers, chunk, *, reps=3, **kw):
     """Best-of-``reps`` tuples/sec (this box is noisy; max is the least
     contended run) plus the last run's sink for the correctness check."""
     best = 0.0
     for _ in range(reps):
-        eng, sink = _build(n_tuples, num_workers, chunk, reference=reference,
-                           backend=backend, batch_ticks=batch_ticks)
+        eng, sink = _build(n_tuples, num_workers, chunk, **kw)
         t0 = time.perf_counter()
         eng.run()
         dt = time.perf_counter() - t0
@@ -90,49 +103,78 @@ def _run_one(n_tuples, num_workers, chunk, *, reference=False, backend=None,
     return best, sink
 
 
+def _plane_of(mode: str) -> str:
+    """Which data plane a mode's rows actually measured — stamped into
+    the perf JSON so a 'pallas' row on a CPU box (host twin) is never
+    mistaken for the jitted device step when diffing across PRs."""
+    if mode == "pallas_jit":
+        return "device-jit"
+    if mode == "pallas":
+        try:
+            from repro.dataflow.device import resolve_executor
+            return ("device-jit" if resolve_executor(None) == "jit"
+                    else "host-twin")
+        except Exception:
+            return "unavailable"
+    return {"reference": "reference", "columnar": "host-columnar",
+            "numpy": "host-fused"}.get(mode, mode)
+
+
 def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
+    n_tuples = common.smoke(n_tuples, 2_000)
+    jit_n = common.smoke(PALLAS_JIT_N, 0)    # skip forced-jit rows in smoke
+    prov = common.provenance()
     rows = []
-    for num_workers in (4, 16):
-        for chunk in (64, 512, 2048):
-            baselines = {}          # stream length -> (tps, sink)
+    for num_workers, chunk in [(w, c) for w in common.smoke((4, 16), (4,))
+                               for c in common.smoke((64, 512, 2048), (64,))]:
+        baselines = {}          # stream length -> (tps, sink)
 
-            def base(n):
-                if n not in baselines:
-                    baselines[n] = _run_one(n, num_workers, chunk,
-                                            reference=True)
-                return baselines[n]
+        def base(n):
+            if n not in baselines:
+                baselines[n] = _run_one(n, num_workers, chunk,
+                                        reference=True)
+            return baselines[n]
 
-            base_tps = base(n_tuples)[0]
-            rows.append(dict(mode="reference", workers=num_workers,
-                             chunk=chunk, tuples_per_sec=round(base_tps),
-                             speedup_vs_reference=1.0))
-            variants = [
-                ("columnar", dict(backend="numpy", batch_ticks=1)),
-                ("numpy", dict(backend="numpy", batch_ticks=BATCH)),
-            ]
-            if include_pallas:
-                variants.append(("pallas", dict(backend="pallas",
-                                                batch_ticks=BATCH,
-                                                n=min(n_tuples, PALLAS_N))))
-            for mode, opts in variants:
-                n = opts.pop("n", n_tuples)
-                try:
-                    tps, sink = _run_one(n, num_workers, chunk, **opts)
-                except ImportError:
-                    continue            # container without jax
-                ref_tps, ref_sink = base(n)   # honest same-n baseline
-                assert np.array_equal(sink.counts, ref_sink.counts), mode
-                rows.append(dict(
-                    mode=mode, workers=num_workers, chunk=chunk,
-                    tuples_per_sec=round(tps),
-                    speedup_vs_reference=round(tps / ref_tps, 2)))
+        base_tps = base(n_tuples)[0]
+        rows.append(dict(mode="reference", workers=num_workers,
+                         chunk=chunk, tuples_per_sec=round(base_tps),
+                         speedup_vs_reference=1.0))
+        variants = [
+            ("columnar", dict(backend="numpy", batch_ticks=1)),
+            ("numpy", dict(backend="numpy", batch_ticks=BATCH)),
+        ]
+        if include_pallas:
+            variants.append(("pallas", dict(backend="pallas",
+                                            batch_ticks=BATCH)))
+            if jit_n:
+                variants.append(("pallas_jit", dict(
+                    backend="pallas", batch_ticks=BATCH,
+                    device_executor="jit", n=min(n_tuples, jit_n))))
+        for mode, opts in variants:
+            n = opts.pop("n", n_tuples)
+            try:
+                tps, sink = _run_one(n, num_workers, chunk, **opts)
+            except ImportError:
+                continue            # container without jax
+            ref_tps, ref_sink = base(n)   # honest same-n baseline
+            assert np.array_equal(sink.counts, ref_sink.counts), mode
+            rows.append(dict(
+                mode=mode, workers=num_workers, chunk=chunk,
+                tuples_per_sec=round(tps),
+                speedup_vs_reference=round(tps / ref_tps, 2)))
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
           "speedup_vs_reference"])
-    # Perf trajectory for future PRs to diff against.
-    with open(JSON_PATH, "w") as f:
-        json.dump([{k: r[k] for k in
-                    ("mode", "workers", "chunk", "tuples_per_sec")}
+    # Perf trajectory for future PRs to diff against (provenance-stamped).
+    # Smoke mode validates the JSON contract against a side path so the
+    # repo-root trajectory is never clobbered by tiny-n runs.
+    json_path = JSON_PATH if not common.SMOKE else os.path.join(
+        common.RESULTS_DIR, "BENCH_engine_throughput.smoke.json")
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump([dict({k: r[k] for k in
+                         ("mode", "workers", "chunk", "tuples_per_sec")},
+                        plane=_plane_of(r["mode"]), **prov)
                    for r in rows], f, indent=1)
         f.write("\n")
 

@@ -6,6 +6,7 @@ from __future__ import annotations
 from repro.core import ReshapeConfig
 from repro.dataflow import build_w1
 
+from . import common
 from .common import emit
 
 # Calibration: the paper collects metrics ~1/sec while a worker processes
@@ -18,7 +19,8 @@ METRIC_PERIOD = 25
 
 def run():
     rows = []
-    for scale, workers in ((0.1, 40), (0.15, 48), (0.2, 56)):
+    for scale, workers in common.smoke(
+            ((0.1, 40), (0.15, 48), (0.2, 56)), ((0.02, 8),)):
         # eta=inf disables mitigation: measure pure collection traffic
         cfg = ReshapeConfig(eta=float("inf"), adaptive_tau=False,
                             metric_period=METRIC_PERIOD)

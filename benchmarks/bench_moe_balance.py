@@ -22,10 +22,11 @@ from repro.core.moe_balancer import (
 from repro.core.types import TransferMode
 from repro.models import moe as moe_lib
 
+from . import common
 from .common import emit
 
-STEPS = 30
-N_TOKENS = 512
+STEPS = common.smoke(30, 4)
+N_TOKENS = common.smoke(512, 128)
 
 
 def run():

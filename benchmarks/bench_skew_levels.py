@@ -8,12 +8,14 @@ import numpy as np
 from repro.dataflow import build_w2
 from repro.dataflow.metrics import PairLoadSampler
 
+from . import common
 from .common import emit
 
 
 def run():
     rows = []
-    for n_tuples, workers in ((20_000, 16), (40_000, 32)):
+    for n_tuples, workers in common.smoke(
+            ((20_000, 16), (40_000, 32)), ((2_000, 8),)):
         wf = build_w2(strategy="reshape", n_tuples=n_tuples,
                       num_workers=workers, service_rate=4)
         eng = wf.engine

@@ -8,12 +8,14 @@ import numpy as np
 from repro.dataflow import build_w3
 from repro.dataflow.metrics import PairLoadSampler
 
+from . import common
 from .common import emit
 
 
 def run():
     rows = []
-    for n_tuples, workers in ((12_000, 10), (24_000, 20)):
+    for n_tuples, workers in common.smoke(
+            ((12_000, 10), (24_000, 20)), ((1_500, 4),)):
         base = build_w3(strategy="none", n_tuples=n_tuples,
                         num_workers=workers)
         base.run()

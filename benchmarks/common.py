@@ -11,6 +11,47 @@ import numpy as np
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
+#: Smoke mode (``python -m benchmarks.run --smoke`` / REPRO_BENCH_SMOKE=1):
+#: every registered bench runs end-to-end at a tiny size so CI catches
+#: bench bit-rot; numbers are meaningless, only "runs + emits valid rows"
+#: is asserted.
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0") or "0"))
+
+
+def smoke(value, tiny):
+    """Pick the real size or the smoke-mode size for an internal table."""
+    return tiny if SMOKE else value
+
+
+def provenance() -> Dict[str, str]:
+    """Provenance fields stamped into persisted perf tables, so the perf
+    trajectory is comparable across PRs: git SHA, accelerator backend,
+    UTC timestamp."""
+    import datetime
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        if sha and subprocess.run(
+                ["git", "status", "--porcelain"], cwd=root,
+                capture_output=True, text=True, timeout=10).stdout.strip():
+            sha += "-dirty"
+    except Exception:
+        sha = ""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "none"
+    return dict(
+        git_sha=sha or "unknown",
+        jax_backend=backend,
+        timestamp=datetime.datetime.now(datetime.timezone.utc).strftime(
+            "%Y-%m-%dT%H:%M:%SZ"),
+    )
+
 
 def emit(bench: str, rows: List[Dict], keys: Iterable[str]) -> None:
     """Print csv rows + persist to results/bench/<bench>.csv."""

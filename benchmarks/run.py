@@ -4,13 +4,25 @@
 ``bench,<columns...>`` CSV lines; each bench also persists its table to
 results/bench/<name>.csv. The engine-throughput bench additionally writes
 ``BENCH_engine_throughput.json`` at the repo root (schema: mode / workers
-/ chunk / tuples_per_sec) so future PRs can diff the perf trajectory.
+/ chunk / tuples_per_sec + provenance: git_sha / jax_backend / timestamp)
+so future PRs can diff the perf trajectory.
+
+``--smoke`` runs every registered bench at a tiny size (scale/n_tuples
+shrunk via signature introspection; internal size tables shrunk via
+``common.smoke``) and *asserts* that each bench completes and emits a
+non-empty, parseable table — the CI guard against bench bit-rot (wired
+into tier-1 as ``tests/test_bench_smoke.py``).  Smoke numbers are
+meaningless and never overwrite the repo-root perf JSON.
+
 The roofline table (§Roofline) is produced by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import csv
+import inspect
+import os
 import sys
 import time
 import traceback
@@ -32,11 +44,48 @@ BENCHES = [
     ("roofline", "roofline", "§Roofline table from the dry-run artifacts"),
 ]
 
+#: smoke-mode overrides applied by parameter name (signature-introspected).
+SMOKE_KWARGS = {"scale": 0.02, "n_tuples": 2_000}
+
+#: benches whose real inputs may be absent (dry-run artifacts): in smoke
+#: mode they must *run* and emit a table, but the table may be empty.
+SMOKE_MAY_BE_EMPTY = {"roofline"}
+
+
+def _smoke_check(name: str) -> str:
+    """Assert the bench's persisted table exists and parses; '' if ok."""
+    from . import common
+    path = os.path.join(common.RESULTS_DIR, f"{name}.csv")
+    if not os.path.exists(path):
+        return f"{name}: no table at {path}"
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows and name not in SMOKE_MAY_BE_EMPTY:
+        return f"{name}: table is empty"
+    if name == "engine_throughput":
+        import json
+        jpath = os.path.join(common.RESULTS_DIR,
+                             "BENCH_engine_throughput.smoke.json")
+        with open(jpath) as f:
+            data = json.load(f)
+        need = {"mode", "workers", "chunk", "tuples_per_sec", "plane",
+                "git_sha", "jax_backend", "timestamp"}
+        if not data or not all(need <= set(r) for r in data):
+            return f"{name}: perf JSON rows missing fields {need}"
+    return ""
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; assert every bench runs + emits "
+                         "valid tables (CI bit-rot guard)")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        from . import common
+        common.SMOKE = True
     failures = 0
     for name, module, desc in BENCHES:
         if args.only and args.only != name:
@@ -45,12 +94,24 @@ def main() -> int:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{module}", fromlist=["run"])
-            mod.run()
+            if args.smoke:
+                params = inspect.signature(mod.run).parameters
+                kwargs = {k: v for k, v in SMOKE_KWARGS.items()
+                          if k in params}
+                mod.run(**kwargs)
+                err = _smoke_check(name)
+                if err:
+                    raise AssertionError(err)
+            else:
+                mod.run()
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"# {name} FAILED", flush=True)
+    if args.smoke:
+        print(f"# smoke: {len(BENCHES)} benches, {failures} failures",
+              flush=True)
     return failures
 
 

@@ -27,7 +27,7 @@ def ld_thresholds(counters: jax.Array) -> jax.Array:
     wrapping integer arithmetic, top 24 bits scaled to float32.
     """
     bits = (counters.astype(jnp.int32) + 1) * jnp.int32(GOLDEN_FIX_I32)
-    top = jax.lax.shift_right_logical(bits, 8)
+    top = jax.lax.shift_right_logical(bits, jnp.int32(8))
     return top.astype(jnp.float32) * jnp.float32(_U24_SCALE)
 
 
@@ -80,7 +80,8 @@ def route_records(
     return jnp.minimum(dest, weights.shape[1] - 1)
 
 
-def within_dest_ranks(dest: jax.Array, num_workers: int) -> jax.Array:
+def within_dest_ranks(dest: jax.Array, num_workers: int,
+                      valid: Optional[jax.Array] = None) -> jax.Array:
     """Within-destination arrival rank per record (the counting scatter).
 
     ranks[i] = #{j < i : dest[j] == dest[i]}.  With the exclusive cumsum
@@ -89,8 +90,13 @@ def within_dest_ranks(dest: jax.Array, num_workers: int) -> jax.Array:
     a stable sort by destination with no sort.  jnp twin of the rank
     output of :func:`repro.kernels.partition.partition_scatter` (one-hot
     cumsum: MXU-friendly and fully static-shaped).
+
+    ``valid`` masks dead lanes (the device plane moves padded chunks):
+    a dead lane advances nobody's rank and its own rank is meaningless.
     """
     onehot = jax.nn.one_hot(dest, num_workers, dtype=jnp.int32)
+    if valid is not None:
+        onehot = onehot * valid.astype(jnp.int32)[:, None]
     cum = jnp.cumsum(onehot, axis=0) - onehot
     return jnp.take_along_axis(cum, dest[:, None].astype(jnp.int32),
                                axis=1)[:, 0]

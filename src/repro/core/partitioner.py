@@ -133,12 +133,21 @@ class RoutingTable:
         # change (the "markers" strategy of §5.3: both happen at the same
         # chunk boundary).
         self.listener = None
+        # When a device exchange plane owns the per-key counters (they
+        # advance on the accelerator), this holds its puller: a callable
+        # returning the authoritative counter array.  ``sync_counters``
+        # materializes on demand (checkpoints); a *host* ``advance``
+        # additionally steals ownership back, so mid-run backend swaps
+        # just work — the device copy is pulled once and the host
+        # sequence continues bit-exactly.
+        self._count_owner = None
 
     # ------------------------------------------------------------------ #
     # Mutations (each bumps `version`; engines treat a version change as  #
     # "the previous operator changed its partitioning logic").            #
     # ------------------------------------------------------------------ #
     def copy(self) -> "RoutingTable":
+        self.sync_counters()
         rt = RoutingTable(self.num_keys, self.num_workers)
         rt.weights = self.weights.copy()
         rt.owner = self.owner.copy()
@@ -260,9 +269,22 @@ class RoutingTable:
         self._any_split = False
         self._derived_version = -1
 
+    def sync_counters(self) -> None:
+        """Materialize device-owned per-key counters into ``_count``.
+
+        No-op when the host owns them.  Ownership is unchanged: the
+        device plane keeps advancing; this is the checkpoint-boundary
+        read.
+        """
+        if self._count_owner is not None:
+            self._count[:] = self._count_owner()
+
     def advance_counters(self, keys: np.ndarray) -> np.ndarray:
         """Per-record running per-key counters for a chunk; advances the
         persistent per-key counts.
+
+        If a device plane owns the counters, they are materialized first
+        and ownership returns to the host (the backend-swap handshake).
 
         Stateless routing (`route_lowdiscrepancy`, the jnp twin, the Pallas
         kernel) consumes the returned counters, so an exchange backend owns
@@ -274,6 +296,9 @@ class RoutingTable:
         keeps destinations identical across backends and the reference
         plane.
         """
+        if self._count_owner is not None:
+            self.sync_counters()
+            self._count_owner = None
         keys = np.asarray(keys, dtype=np.int64)
         counters = np.zeros(keys.size, dtype=np.int64)
         if keys.size == 0:

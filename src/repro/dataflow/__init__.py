@@ -5,6 +5,9 @@ Layout:
                  pops; phi metric source)
   exchange.py    fused one-pass exchange: partition→rank→scatter per edge
                  via ScatterPlan, pluggable numpy/Pallas backend
+  device.py      device-resident exchange plane: per-edge fused jitted
+                 super-tick step (partition→rank→scatter→pop→fold),
+                 boundary-only host readback
   state.py       array-backed keyed-state containers (AggStore/ScopeRows)
   operators.py   Filter/Project/HashJoin/GroupBy/RangeSort/Sink workers
   engine.py      tick-based pipelined executor (optionally batching K
@@ -19,6 +22,7 @@ Layout:
 """
 from .engine import Edge, Engine, EngineAdapter, Source
 from .exchange import (
+    DeviceExchange,
     Exchange,
     NumpyPartitionBackend,
     PallasPartitionBackend,
@@ -44,6 +48,7 @@ from .workflows import Workflow, build_w1, build_w2, build_w3, build_w4
 
 __all__ = [
     "AggStore",
+    "DeviceExchange",
     "Edge",
     "Engine",
     "EngineAdapter",

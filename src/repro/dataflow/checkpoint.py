@@ -27,6 +27,7 @@ from .operators import RangeSort, Sink
 
 
 def _snap_routing(rt) -> Dict:
+    rt.sync_counters()       # device-resident counters: materialize
     return dict(
         weights=rt.weights.copy(),
         owner=rt.owner.copy(),
@@ -37,6 +38,7 @@ def _snap_routing(rt) -> Dict:
 
 
 def _restore_routing(rt, s: Dict) -> None:
+    rt._count_owner = None   # the host copy becomes authoritative
     rt.weights[:] = s["weights"]
     rt.owner[:] = s["owner"]
     rt.version = s["version"]
@@ -90,7 +92,16 @@ def _restore_controller(ctrl, s: Dict) -> None:
 
 
 def snapshot(engine: Engine) -> Dict:
-    """Consistent engine checkpoint at a tick boundary."""
+    """Consistent engine checkpoint at a tick boundary.
+
+    A checkpoint is one of the device plane's materialization
+    boundaries: every device-resident operator first syncs its rings,
+    keyed state and counters into the host structures this snapshot
+    copies, so the cut is bit-identical to the host plane's.
+    """
+    for op in engine.ops:
+        if op.device is not None:
+            op.device.sync_host()
     snap: Dict = dict(tick=engine.tick, state_units_moved=engine.state_units_moved)
     snap["sources"] = [dict(pos=s.pos, finished=s.finished) for s in engine.sources]
     snap["edges"] = [
@@ -167,6 +178,13 @@ def restore(engine: Engine, snap: Dict) -> None:
             op.series = list(os_["series"])
     for att, cs in zip(engine.controllers, snap["controllers"]):
         _restore_controller(att.controller, cs)
+    # Device-resident operators replay from the restored host truth: the
+    # device copies are dropped and lazily re-uploaded (mid-super-tick
+    # failures thus resume from the last boundary, counters and queues
+    # bit-identical to the host plane).
+    for op in engine.ops:
+        if op.device is not None:
+            op.device.on_restore()
 
 
 class CheckpointCoordinator:

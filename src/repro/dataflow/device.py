@@ -1,0 +1,857 @@
+"""The device-resident exchange plane: fused super-tick steps per edge.
+
+This module keeps one edge's *entire* data plane on the accelerator
+between host boundaries: the chunk in flight, the per-worker ring
+queues, the routing constants (float32 row-CDF, primaries, split mask,
+owners), the per-key split counters and the downstream keyed fold all
+live as ``jnp`` arrays, and a single **persistent jitted step** per edge
+advances them — partition → within-destination rank → ring scatter →
+budgeted pop → vectorized fold (GroupByAgg / Sink) or stateless map
+(Filter / Project) — in **one dispatch per edge per super-tick**, with
+the mutable state pytree donated so the device can reuse the buffers in
+place.
+
+Host readback is confined to
+
+  * O(num_workers) control metrics per dispatch (histogram / popped /
+    emitted counts) that keep the host mirrors — queue lengths,
+    ``sent_per_worker``, worker stats — exact without touching record
+    data, and
+  * full materialization **only at the boundaries the batched scheduler
+    already computes** (:meth:`Engine._fusible_ticks`): sink snapshots,
+    controller metric rounds, checkpoint cuts, END markers and routing
+    rewrites, via :meth:`DeviceOpRuntime.sync_host`.
+
+Record payloads (keys / vals / dest / rank) never cross the host
+boundary between those points; chunks handed from one device operator to
+the next stay on the device as padded, validity-masked
+:class:`DeviceChunk` buffers, so consecutive fused edges share one
+residency domain.
+
+Executors
+---------
+``jit``   the real device plane as described above.  Default on TPU;
+          forced off-TPU with ``Engine(device_executor="jit")`` or
+          ``REPRO_DEVICE_EXECUTOR=jit`` (the correctness/CI mode — the
+          equivalence and checkpoint tests run it).  With
+          ``device_use_kernel=True`` the partition core inside the step
+          additionally runs the fused Pallas ``partition_scatter`` /
+          ``partition_scatter_fold`` kernels (interpret mode off TPU).
+``host``  the validation twin on accelerator-less boxes: the identical
+          canonical fixed-point routing rule executed by the fused numpy
+          exchange (the backend-equivalence suite proves the planes
+          bit-identical), so off-TPU benchmark rows measure the plane
+          architecture instead of XLA:CPU's serial scatter/sort lowering
+          (measured 10-30x slower than numpy's radix sort / bincount for
+          the placement primitives on this class of box).
+
+Bit-exactness: destinations, ranks, histograms, queue contents, split
+counters and every integer metric are identical across the jit step, the
+host twin and the reference plane (the routing core is the canonical
+rule of :mod:`repro.core.partitioner`; placement and budgeted pops are
+integer arithmetic).  Float64 val payloads round-trip untouched through
+rings and maps; only the *summation order* of keyed float folds may
+differ from numpy's sequential weighted ``bincount`` (XLA scatter-add),
+which is why the engine's cross-plane contract is stated on
+``Sink.series`` / ``Sink.counts`` (integers) and checkpoint counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Union
+
+import numpy as np
+
+from .tuples import Chunk, ring_span
+
+__all__ = ["DeviceChunk", "DeviceOpRuntime", "resolve_executor", "wireable"]
+
+#: fold-state ceiling: skip device wiring when W * K explodes.
+MAX_FOLD_CELLS = 1 << 22
+
+#: pop-window ceiling: a ring-backed operator's per-super-tick budget
+#: bounds the static window width B; "effectively unbounded" service
+#: rates (the Sink idiom, 2**31-1) would demand an absurd window, so
+#: such operators stay on the host path (the Sink itself bypasses rings
+#: and is unaffected).
+MAX_SERVICE_RATE = 1 << 20
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def _x64():
+    from jax.experimental import enable_x64
+    return enable_x64()
+
+
+def _interpret() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_executor(requested: Optional[str]) -> str:
+    """Pick the device-plane executor: ``jit`` on TPU, else the host twin.
+
+    ``requested`` (constructor arg) or ``REPRO_DEVICE_EXECUTOR`` force a
+    choice — ``"jit"`` off-TPU is the correctness mode tests run.
+    """
+    import os
+
+    import jax
+    ex = requested or os.environ.get("REPRO_DEVICE_EXECUTOR")
+    if ex in ("jit", "host"):
+        return ex
+    if ex is not None:
+        raise ValueError(f"unknown device executor {ex!r}")
+    return "jit" if jax.default_backend() == "tpu" else "host"
+
+
+def wireable(op, num_keys: int) -> bool:
+    """Is ``op`` a device-foldable destination for an edge of ``num_keys``?
+
+    Exact types only (a subclass may override ``process``); the fold
+    state is dense per (worker, key), so wide key spaces stay host-side.
+    """
+    from .operators import Filter, GroupByAgg, Project, Sink
+    return (type(op) in (Filter, Project, GroupByAgg, Sink)
+            and op.num_workers * num_keys <= MAX_FOLD_CELLS
+            and (type(op) is Sink or op.service_rate <= MAX_SERVICE_RATE))
+
+
+# --------------------------------------------------------------------- #
+# Device chunks                                                          #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class DeviceChunk:
+    """A padded, validity-masked chunk resident on the device.
+
+    ``n_live`` is the host-known number of live lanes (exact: it comes
+    from the emitting step's O(W) metric readback), so the engine makes
+    control decisions — skip empty sends, END detection — without
+    reading the mask back.
+    """
+
+    keys: object                 # [NB] int64 jnp
+    vals: object                 # [NB] float64 jnp
+    valid: object                # [NB] bool jnp
+    n_live: int
+
+    def to_host(self) -> Chunk:
+        """Materialize + compact (the device -> host plane boundary)."""
+        m = np.asarray(self.valid)
+        return (np.asarray(self.keys)[m], np.asarray(self.vals)[m])
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """The static half of a jitted step (hashable: keys the trace cache)."""
+
+    kind: str                    # "fold" | "filter" | "project" | "sink"
+    W: int                       # destination workers
+    K: int                       # key-space size
+    cap: int                     # ring capacity (power of two)
+    B: int                       # pop-window width (max budget)
+    any_split: bool              # routing table carries split keys
+    may_scatter: bool            # owned/scattered fold split armed
+    track_stats: bool            # per-key arrival stats fold armed
+    use_kernel: bool             # partition core via the Pallas kernel
+    fn: Optional[Callable] = None   # Filter predicate / Project map
+
+
+# --------------------------------------------------------------------- #
+# Step building blocks (pure jnp; caller holds the x64 context)           #
+# --------------------------------------------------------------------- #
+def _advance_and_route(spec: StepSpec, consts, count, keys, valid):
+    """Device twin of ``RoutingTable.advance_counters`` + the canonical
+    inverse-CDF rule: (dest, rank, hist, new_count); dead lanes advance
+    neither the split counters nor anyone's rank."""
+    import jax
+    jnp = _jnp()
+    from ..core.ops import ld_thresholds
+
+    if spec.any_split:
+        live = valid & consts["is_split"][keys]
+        n = keys.shape[0]
+        arange = jnp.arange(n, dtype=count.dtype)
+        sent = jnp.where(live, keys, spec.K)      # dead lanes sort last
+        order = jnp.argsort(sent, stable=True)
+        sk = sent[order]
+        starts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+        seg_start = jax.lax.cummax(jnp.where(starts, arange, 0))
+        occ = jnp.zeros(n, count.dtype).at[order].set(arange - seg_start)
+        counters = jnp.where(live, count[keys] + occ, 0)
+        new_count = count.at[keys].add(live.astype(count.dtype))
+        if spec.use_kernel:
+            # Fused Pallas partition core: bit-identical destinations by
+            # the canonical rule (interpret mode off TPU).
+            import importlib
+            kpart = importlib.import_module("repro.kernels.partition")
+            kdest, _, _ = kpart.partition_scatter(
+                keys.astype(jnp.int32), counters.astype(jnp.int32),
+                consts["cdf"], cdf=consts["cdf"], interpret=_interpret())
+            dest = kdest.astype(keys.dtype)
+        else:
+            u = ld_thresholds(counters)
+            dest = jnp.sum(u[:, None] >= consts["cdf"][keys],
+                           axis=1).astype(keys.dtype)
+            dest = jnp.minimum(dest, spec.W - 1)
+            dest = jnp.where(consts["is_split"][keys], dest,
+                             consts["primary"][keys])
+    else:
+        # One-hot table: destinations are counter-independent and the
+        # low-discrepancy sequence is not consumed (host policy).
+        dest = consts["primary"][keys]
+        new_count = count
+    onehot = ((dest[:, None] == jnp.arange(spec.W, dtype=dest.dtype)[None, :])
+              & valid[:, None]).astype(count.dtype)
+    hist = onehot.sum(axis=0)
+    rank = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=1)
+    return dest, rank, hist, new_count
+
+
+def _push(spec: StepSpec, state, keys, vals, valid, dest, rank, hist):
+    jnp = _jnp()
+    pos = (state["tail"][dest] + rank) % spec.cap
+    flat = jnp.where(valid, dest * spec.cap + pos, spec.W * spec.cap)
+    rk = state["rk"].reshape(-1).at[flat].set(
+        keys, mode="drop").reshape(spec.W, spec.cap)
+    rv = state["rv"].reshape(-1).at[flat].set(
+        vals, mode="drop").reshape(spec.W, spec.cap)
+    return dict(state, rk=rk, rv=rv, tail=state["tail"] + hist)
+
+
+def _pop(spec: StepSpec, state, budget):
+    jnp = _jnp()
+    lens = state["tail"] - state["head"]
+    take = jnp.minimum(budget, lens)                       # [W]
+    iot = jnp.arange(spec.B, dtype=lens.dtype)
+    idx = (state["head"][:, None] + iot[None, :]) % spec.cap
+    wmask = iot[None, :] < take[:, None]                   # [W, B]
+    wk = jnp.take_along_axis(state["rk"], idx, axis=1)
+    wv = jnp.take_along_axis(state["rv"], idx, axis=1)
+    return wk, wv, wmask, take, dict(state, head=state["head"] + take)
+
+
+def _fold_stats(spec: StepSpec, state, keys, valid):
+    if not spec.track_stats:
+        return state
+    one = valid.astype(state["arrived"].dtype)
+    return dict(state,
+                arrived=state["arrived"].at[keys].add(one),
+                totals=state["totals"].at[keys].add(one))
+
+
+def _ingest(spec: StepSpec, consts, state, chunk):
+    """Route + ring-scatter one staged chunk (the partition half)."""
+    keys, vals, valid = chunk
+    dest, rank, hist, count = _advance_and_route(
+        spec, consts, state["count"], keys, valid)
+    state = _push(spec, dict(state, count=count), keys, vals, valid,
+                  dest, rank, hist)
+    return _fold_stats(spec, state, keys, valid), hist
+
+
+def _make_step_fold():
+    import jax
+
+    @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+    def step(spec: StepSpec, consts, state, chunk, budget):
+        jnp = _jnp()
+        if chunk is not None:
+            state, hist = _ingest(spec, consts, state, chunk)
+        else:
+            hist = jnp.zeros((spec.W,), state["tail"].dtype)
+        wk, wv, wmask, take, state = _pop(spec, state, budget)
+        wid = jnp.arange(spec.W, dtype=wk.dtype)[:, None]
+        owned = (consts["owner"][wk] == wid) if spec.may_scatter else wmask
+        m_own = wmask & owned
+        m_scat = wmask & ~owned
+        flat = (wid * spec.K + wk).reshape(-1)
+        wvf = wv.reshape(-1)
+
+        def fold(cnt, sm, pres, m):
+            mf = m.reshape(-1)
+            cnt = cnt.reshape(-1).at[flat].add(
+                mf.astype(cnt.dtype)).reshape(spec.W, spec.K)
+            sm = sm.reshape(-1).at[flat].add(
+                jnp.where(mf, wvf, 0.0)).reshape(spec.W, spec.K)
+            pres = pres.reshape(-1).at[flat].max(mf).reshape(spec.W, spec.K)
+            return cnt, sm, pres
+
+        cnt, sm, pres = fold(state["counts"], state["sums"],
+                             state["present"], m_own)
+        scnt, ssm, spres = fold(state["scat_counts"], state["scat_sums"],
+                                state["scat_present"], m_scat)
+        state = dict(state, counts=cnt, sums=sm, present=pres,
+                     scat_counts=scnt, scat_sums=ssm, scat_present=spres)
+        return state, (hist, take)
+
+    return step
+
+
+def _make_step_map():
+    import jax
+
+    @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+    def step(spec: StepSpec, consts, state, chunk, budget):
+        jnp = _jnp()
+        if chunk is not None:
+            state, hist = _ingest(spec, consts, state, chunk)
+        else:
+            hist = jnp.zeros((spec.W,), state["tail"].dtype)
+        wk, wv, wmask, take, state = _pop(spec, state, budget)
+        if spec.kind == "filter":
+            keep = wmask & spec.fn(wk, wv).astype(bool)
+            ok, ov = wk, wv
+        else:                                   # project
+            ok, ov = spec.fn(wk, wv)
+            ok = ok.astype(wk.dtype)
+            ov = ov.astype(wv.dtype)
+            keep = wmask
+        out = (ok.reshape(-1), ov.reshape(-1), keep.reshape(-1))
+        emitted = keep.sum(axis=1, dtype=take.dtype)
+        return state, out, (hist, take, emitted)
+
+    return step
+
+
+def _make_step_sink():
+    import jax
+
+    @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+    def step(spec: StepSpec, consts, state, chunk):
+        jnp = _jnp()
+        keys, vals, valid = chunk
+        state = _fold_stats(spec, state, keys, valid)
+        if spec.use_kernel:
+            # Fused partition_scatter_fold kernel: per-key counts + sums
+            # in the same pass that certifies dest/hist (W == 1, so the
+            # one-column CDF routes everything to worker 0).
+            import importlib
+            kpart = importlib.import_module("repro.kernels.partition")
+            ones = jnp.ones((spec.K, 1), jnp.float32)
+            _, _, _, kcnt, ksm = kpart.partition_scatter_fold(
+                keys.astype(jnp.int32), jnp.zeros(keys.shape, jnp.int32),
+                vals.astype(jnp.float32), ones,
+                valid=valid.astype(jnp.int32), cdf=ones,
+                interpret=_interpret())
+            counts = state["counts"] + kcnt.astype(state["counts"].dtype)
+            sums = state["sums"] + ksm.astype(state["sums"].dtype)
+        else:
+            one = valid.astype(state["counts"].dtype)
+            counts = state["counts"].at[keys].add(one)
+            sums = state["sums"].at[keys].add(jnp.where(valid, vals, 0.0))
+        return dict(state, counts=counts, sums=sums), ()
+
+    return step
+
+
+_STEP_CACHE = {}
+
+
+def _step_for(kind: str):
+    """One persistent jitted step per operator family; the cache is
+    module-global so repeated engine builds retrace only on a genuinely
+    new :class:`StepSpec` (shape growth, rewrite arming, new user fn)."""
+    if kind not in _STEP_CACHE:
+        _STEP_CACHE[kind] = {"fold": _make_step_fold,
+                             "filter": _make_step_map,
+                             "project": _make_step_map,
+                             "sink": _make_step_sink}[kind]()
+    return _STEP_CACHE[kind]
+
+
+def _pow2(n: int) -> int:
+    p = 256
+    while p < n:
+        p <<= 1
+    return p
+
+
+# --------------------------------------------------------------------- #
+# The per-(edge, operator) runtime                                        #
+# --------------------------------------------------------------------- #
+class DeviceOpRuntime:
+    """Owns one destination operator's device residency.
+
+    Created by the engine when an edge's destination is device-foldable
+    and the ``jit`` executor is selected.  The host keeps exact integer
+    mirrors (queue lengths, received/processed/emitted totals) updated
+    from the O(W) per-dispatch metrics; record data stays on the device
+    until :meth:`sync_host`.
+    """
+
+    def __init__(self, op, edge, engine, *, use_kernel: bool = False):
+        from .operators import Filter, GroupByAgg, Project, Sink
+
+        self.op = op
+        self.edge = edge
+        self.engine = engine
+        self.routing = edge.routing
+        self.use_kernel = bool(use_kernel)
+        self.kind = {Filter: "filter", Project: "project",
+                     GroupByAgg: "fold", Sink: "sink"}[type(op)]
+        self.W = op.num_workers
+        self.K = edge.routing.num_keys
+        self.NB = 0                    # upload padding width (static)
+        self.B = 0                     # pop-window width (static)
+        self.cap = 0                   # ring capacity (static, pow2)
+        self.state = None              # device pytree (lazily allocated)
+        self.consts = None
+        self._consts_version = -1
+        self._dispatched = False
+        self.staged: List[DeviceChunk] = []
+        self.staged_live = 0
+        # host mirrors (exact integers, updated per dispatch)
+        self.lens = np.zeros(self.W, dtype=np.int64)
+        self.received = np.zeros(self.W, dtype=np.int64)
+        self._fn = getattr(op, "predicate", None) or getattr(op, "fn", None)
+        self._pull = self._pull_counters    # stable identity (ownership)
+        self._host_fresh = False   # host copies match device state
+        self._reload_pending = False   # host mutated: reload pre-dispatch
+
+    # ---- small helpers ------------------------------------------------ #
+    def _spec(self) -> StepSpec:
+        rt = self.routing
+        rt._refresh_derived()
+        return StepSpec(kind=self.kind, W=self.W, K=self.K, cap=self.cap,
+                        B=self.B, any_split=bool(rt._any_split),
+                        may_scatter=bool(self.op.may_scatter),
+                        track_stats=bool(self.op.track_key_stats
+                                         and self.op.arrived_by_key
+                                         is not None),
+                        use_kernel=self.use_kernel, fn=self._fn)
+
+    def backlog_total(self) -> int:
+        return int(self.lens.sum()) + self.staged_live
+
+    def workloads(self) -> np.ndarray:
+        out = self.lens.astype(np.float64)
+        if self.W == 1:
+            out = out + float(self.staged_live)
+        return out
+
+    def received_totals(self) -> np.ndarray:
+        return self.received.astype(np.float64)
+
+    # ---- demotion (host fallback) ------------------------------------- #
+    def demote(self, reason: str) -> None:
+        """Fall back to the per-chunk host pallas path (rare: 2-D vals,
+        an untraceable user fn, or a second in-edge)."""
+        from .exchange import Exchange
+        staged, self.staged, self.staged_live = self.staged, [], 0
+        if self.kind == "sink":
+            # Staged sink chunks were accounted at stage time; the host
+            # re-send below accounts again.  Back the mirror out *before*
+            # sync_host materializes it into queue.received_total.
+            for ch in staged:
+                self.received[0] -= ch.n_live
+        if self.state is not None:
+            self.sync_host()
+        self.op.device = None
+        old = self.edge.exchange
+        ex = Exchange(self.routing, self.op, "pallas")
+        ex.tuples_sent = old.tuples_sent
+        ex.sent_per_worker[:] = old.sent_per_worker
+        if self.kind == "sink":
+            for ch in staged:
+                ex.tuples_sent -= ch.n_live
+                ex.sent_per_worker[0] -= ch.n_live
+        self.edge.exchange = ex
+        self.edge.device_plane = f"demoted({reason})"
+        for ch in staged:
+            k, v = ch.to_host() if isinstance(ch, DeviceChunk) else ch
+            if getattr(k, "size", len(k)):
+                ex.send((k, v))
+
+    # ---- staging (DeviceExchange.send lands here) --------------------- #
+    def stage(self, chunk: Union[Chunk, DeviceChunk]) -> None:
+        if isinstance(chunk, DeviceChunk):
+            if chunk.n_live == 0:
+                return
+            self._append(chunk)
+            return
+        keys, vals = chunk
+        n = int(keys.shape[0])
+        if n == 0:
+            return
+        if getattr(vals, "ndim", 1) != 1:
+            self.demote("2-D vals")
+            self.edge.exchange.send(chunk)
+            return
+        if n > self.NB:
+            # Grow the padded upload width (a new pow2 width retraces the
+            # step once; oversized host chunks are rare — END flushes are
+            # bounded by W * K — so growth beats splitting).
+            self.NB = _pow2(n)
+        self._append(self._upload(keys, vals))
+
+    def _append(self, chunk: DeviceChunk) -> None:
+        self.staged.append(chunk)
+        self.staged_live += chunk.n_live
+        self._host_fresh = False
+        if self.kind == "sink":
+            # Single-worker sink: the histogram is known without a
+            # dispatch, and staged chunks may cross a super-tick boundary
+            # — account at send time exactly like the host plane.
+            self.edge.exchange.account(
+                np.array([chunk.n_live], dtype=np.int64))
+            self.received[0] += chunk.n_live
+
+    def _upload(self, keys: np.ndarray, vals: np.ndarray) -> DeviceChunk:
+        jnp = _jnp()
+        n = int(keys.shape[0])
+        pk = np.zeros(self.NB, np.int64)
+        pv = np.zeros(self.NB, np.float64)
+        m = np.zeros(self.NB, bool)
+        pk[:n] = keys
+        pv[:n] = vals
+        m[:n] = True
+        with _x64():
+            return DeviceChunk(jnp.asarray(pk), jnp.asarray(pv),
+                               jnp.asarray(m), n)
+
+    # ---- device state lifecycle --------------------------------------- #
+    def _alloc_state(self) -> None:
+        jnp = _jnp()
+        with _x64():
+            st = dict(count=jnp.zeros(self.K, jnp.int64),
+                      arrived=jnp.zeros(self.K, jnp.int64),
+                      totals=jnp.zeros(self.K, jnp.int64))
+            if self.kind != "sink":
+                st.update(rk=jnp.zeros((self.W, self.cap), jnp.int64),
+                          rv=jnp.zeros((self.W, self.cap), jnp.float64),
+                          head=jnp.zeros(self.W, jnp.int64),
+                          tail=jnp.zeros(self.W, jnp.int64))
+            if self.kind == "fold":
+                for name in ("counts", "scat_counts"):
+                    st[name] = jnp.zeros((self.W, self.K), jnp.int64)
+                for name in ("sums", "scat_sums"):
+                    st[name] = jnp.zeros((self.W, self.K), jnp.float64)
+                for name in ("present", "scat_present"):
+                    st[name] = jnp.zeros((self.W, self.K), bool)
+            if self.kind == "sink":
+                st["counts"] = jnp.zeros(self.K, jnp.int64)
+                st["sums"] = jnp.zeros(self.K, jnp.float64)
+        self.state = st
+        self._load_host_state()
+
+    def _load_host_state(self) -> None:
+        """Host -> device: (re)load keyed state, rings and mirrors from
+        the operator's host structures (initial wiring, post-migration
+        staleness, checkpoint restore)."""
+        jnp = _jnp()
+        op = self.op
+        self._reload_pending = False
+        self._host_fresh = False
+        with _x64():
+            if self.kind != "sink":
+                rk = np.zeros((self.W, self.cap), np.int64)
+                rv = np.zeros((self.W, self.cap), np.float64)
+                for w, worker in enumerate(op.workers):
+                    k, v = worker.queue.snapshot()
+                    if v.ndim != 1:
+                        raise ValueError("device plane requires 1-D vals")
+                    ln = int(k.size)
+                    rk[w, :ln] = k
+                    rv[w, :ln] = v
+                    self.lens[w] = ln
+                    self.received[w] = worker.queue.received_total
+                self.state.update(
+                    rk=jnp.asarray(rk), rv=jnp.asarray(rv),
+                    head=jnp.zeros(self.W, jnp.int64),
+                    tail=jnp.asarray(self.lens.copy()))
+            if self.kind == "fold":
+                own = [w.state.export_dense() for w in op.workers]
+                scat = [w.scattered.export_dense() for w in op.workers]
+                self.state.update(
+                    counts=jnp.asarray(np.stack([o[0] for o in own])),
+                    sums=jnp.asarray(np.stack([o[1] for o in own])),
+                    present=jnp.asarray(np.stack([o[2] for o in own])),
+                    scat_counts=jnp.asarray(np.stack([s[0] for s in scat])),
+                    scat_sums=jnp.asarray(np.stack([s[1] for s in scat])),
+                    scat_present=jnp.asarray(np.stack([s[2] for s in scat])))
+            if self.kind == "sink":
+                self.state.update(counts=jnp.asarray(op.counts.copy()),
+                                  sums=jnp.asarray(op.sums.copy()))
+                # The received mirror is stage-accounted and already
+                # correct on every path into here (mid-run staging, or
+                # ``on_restore`` which read the restored queue) — do NOT
+                # overwrite it from the scratch host queue, whose count
+                # lags the chunks staged before first allocation.
+                k, v = op.workers[0].queue.snapshot()
+                if k.size:           # restored backlog: re-stage, already
+                    self.staged = [self._restage(k, v)]     # accounted
+                    self.staged_live = int(k.size)
+
+    def _restage(self, keys: np.ndarray, vals: np.ndarray) -> DeviceChunk:
+        if keys.shape[0] > self.NB:
+            self.NB = _pow2(int(keys.shape[0]))
+        return self._upload(keys, vals)
+
+    def _ensure_ready(self) -> None:
+        """Grow static shapes (cap/B) and allocate device state."""
+        # wireable() guarantees service_rate <= MAX_SERVICE_RATE for
+        # ring-backed kinds, so B always covers the engine's budgets.
+        budget_cap = self.engine.batch_ticks * self.op.service_rate
+        if self.kind != "sink" and budget_cap > self.B:
+            self.B = int(budget_cap)
+        need = int(self.lens.max(initial=0)) + self.staged_live
+        if self.state is None:
+            self.cap = max(self.cap, _pow2(2 * max(need, 1)))
+            self._alloc_state()
+        elif need > self.cap and self.kind != "sink":
+            self.cap = _pow2(2 * need)
+            self._regrow_rings()
+
+    def _regrow_rings(self) -> None:
+        """Re-layout the rings at a larger capacity (content preserved)."""
+        jnp = _jnp()
+        rk_np = np.asarray(self.state["rk"])
+        rv_np = np.asarray(self.state["rv"])
+        head = np.asarray(self.state["head"])
+        old_cap = rk_np.shape[1]
+        new_k = np.zeros((self.W, self.cap), np.int64)
+        new_v = np.zeros((self.W, self.cap), np.float64)
+        for w in range(self.W):
+            ln = int(self.lens[w])
+            idx = ring_span(head[w], ln, old_cap)
+            new_k[w, :ln] = rk_np[w, idx]
+            new_v[w, :ln] = rv_np[w, idx]
+        with _x64():
+            self.state.update(rk=jnp.asarray(new_k), rv=jnp.asarray(new_v),
+                              head=jnp.zeros(self.W, jnp.int64),
+                              tail=jnp.asarray(self.lens.copy()))
+
+    # ---- routing constants / split counters --------------------------- #
+    def _refresh_consts(self) -> None:
+        jnp = _jnp()
+        rt = self.routing
+        rt._refresh_derived()
+        if self.consts is None or self._consts_version != rt.version:
+            with _x64():
+                self.consts = dict(
+                    cdf=jnp.asarray(rt.cdf32, jnp.float32),
+                    primary=jnp.asarray(rt._primary),
+                    is_split=jnp.asarray(rt._is_split),
+                    owner=jnp.asarray(rt.owner.copy()))
+            self._consts_version = rt.version
+
+    def _pull_counters(self) -> np.ndarray:
+        return np.asarray(self.state["count"])
+
+    def _claim_counters(self) -> None:
+        rt = self.routing
+        if rt._count_owner is not self._pull:
+            rt.sync_counters()          # a previous owner's last word
+            jnp = _jnp()
+            with _x64():
+                self.state["count"] = jnp.asarray(rt._count.copy())
+            rt._count_owner = self._pull
+
+    # ---- the fused super-tick dispatch -------------------------------- #
+    def tick(self, budget: int) -> List:
+        if self.state is None and not self.staged:
+            return []                  # nothing ever arrived
+        if self.kind != "sink" and int(budget) > self.B:
+            # A caller outpaced the batch_ticks sizing (manual
+            # run_super_tick with a wider window): widen the static pop
+            # window so no popped lane can fall outside it (retrace).
+            self.B = int(budget)
+        self._ensure_ready()
+        if self._reload_pending:
+            self._reload_pending = False
+            self._load_host_state()
+        self._refresh_consts()
+        if self.kind != "sink":
+            self._claim_counters()
+        chunks, self.staged, self.staged_live = self.staged, [], 0
+        step = _step_for(self.kind)
+        self._host_fresh = False
+        try:
+            return self._dispatch(step, chunks, budget)
+        except Exception as exc:
+            if self._dispatched:
+                raise
+            # First-ever dispatch failed (typically an untraceable user
+            # fn): fall back to the host plane and replay this tick
+            # there.  The warning keeps genuine device-plane errors —
+            # OOM, version breakage — from being silently masked as a
+            # perf cliff.
+            import warnings
+            warnings.warn(
+                f"device plane: first dispatch for {self.op.name!r} "
+                f"failed ({type(exc).__name__}: {exc}); demoting the "
+                f"edge to the host path", RuntimeWarning, stacklevel=2)
+            self.staged = chunks
+            self.staged_live = sum(c.n_live for c in chunks)
+            self.demote("untraceable fn")
+            return self.op.tick(budget)
+
+    def flush_staged(self) -> None:
+        """Route staged chunks into the rings without popping (budget 0).
+
+        A blocking upstream's END flush (engine phase 3) can stage a
+        chunk *after* this operator's tick in the same super-tick; the
+        host plane would already have routed it into the queues, so
+        every boundary read (controller metrics, checkpoint cuts) first
+        flushes to keep queue lengths, received totals and key-arrival
+        stats bit-identical.  The sink keeps its staged chunks (they
+        materialize as queue content instead)."""
+        if self.staged and self.kind != "sink" and self.op.device is self:
+            self.tick(0)
+
+    def _dispatch(self, step, chunks, budget) -> List:
+        with _x64():
+            if self.kind == "sink":
+                for ch in chunks:      # accounted at stage time
+                    self.state, _ = step(self._spec(), self.consts,
+                                         self.state,
+                                         (ch.keys, ch.vals, ch.valid))
+                self._dispatched = True
+                return []
+            seq = ([(c, 0) for c in chunks[:-1]]
+                   + [(chunks[-1], budget)]) if chunks else [(None, budget)]
+            outs: List[DeviceChunk] = []
+            for ch, b in seq:
+                dc = (None if ch is None
+                      else (ch.keys, ch.vals, ch.valid))
+                res = step(self._spec(), self.consts, self.state, dc,
+                           np.int64(b))
+                if self.kind == "fold":
+                    self.state, (hist, take) = res
+                    emitted = None
+                else:
+                    self.state, out, (hist, take, emitted) = res
+                self._dispatched = True
+                hist = np.asarray(hist)
+                take = np.asarray(take)
+                self.edge.exchange.account(hist)
+                self.received += hist
+                self.lens += hist - take
+                for w, worker in enumerate(self.op.workers):
+                    worker.stats.processed_total += int(take[w])
+                if emitted is not None:
+                    em = np.asarray(emitted)
+                    n_live = int(em.sum())
+                    for w, worker in enumerate(self.op.workers):
+                        worker.stats.emitted_total += int(em[w])
+                    if n_live:
+                        outs.append(DeviceChunk(*out, n_live))
+        # Emission happens here (inside the op's tick slot) so the
+        # downstream edge sees outputs in exactly the host plane's order.
+        if outs and self.op.out_edge is not None:
+            for oc in outs:
+                self.op.out_edge.send(oc)
+        return []
+
+    # ---- boundary materialization ------------------------------------- #
+    def sync_stats(self) -> None:
+        """Drain the device per-key arrival accumulators into the host
+        arrays the controller adapter reads (metric-round boundary)."""
+        self.flush_staged()
+        if self.state is None or self.op.arrived_by_key is None:
+            return
+        a = np.asarray(self.state["arrived"])
+        if a.any():
+            jnp = _jnp()
+            t = np.asarray(self.state["totals"])
+            self.op.arrived_by_key += a
+            self.op.key_arrivals_total += t
+            with _x64():
+                self.state.update(arrived=jnp.zeros(self.K, jnp.int64),
+                                  totals=jnp.zeros(self.K, jnp.int64))
+
+    def sync_sink_counts(self) -> None:
+        """Sink-snapshot boundary: materialize the result columns only."""
+        if self.state is not None:
+            self.op.counts[:] = np.asarray(self.state["counts"])
+            self.op.sums[:] = np.asarray(self.state["sums"])
+
+    def sync_host(self) -> None:
+        """Full device -> host materialization (checkpoint cut, END,
+        routing rewrite, backend swap).  Device state stays authoritative
+        afterwards; call :meth:`mark_state_stale` if the host copies are
+        then mutated (migrations, restores).  Idempotent between
+        dispatches: repeated boundary reads (e.g. per-candidate
+        ``state_units`` probes in one metric round) pay one transfer."""
+        self.flush_staged()
+        if self.state is None or self._host_fresh:
+            return
+        if self._reload_pending:
+            # The host was mutated after the last sync and no dispatch
+            # has run since: the host copies are *ahead* of the device —
+            # materializing now would clobber them with stale state.
+            return
+        op = self.op
+        if self.kind != "sink":
+            rk = np.asarray(self.state["rk"])
+            rv = np.asarray(self.state["rv"])
+            head = np.asarray(self.state["head"])
+            for w, worker in enumerate(op.workers):
+                idx = ring_span(head[w], self.lens[w], self.cap)
+                worker.queue.restore((rk[w, idx].copy(), rv[w, idx].copy()),
+                                     int(self.received[w]))
+        if self.kind == "fold":
+            cnt = np.asarray(self.state["counts"])
+            sm = np.asarray(self.state["sums"])
+            pres = np.asarray(self.state["present"])
+            scnt = np.asarray(self.state["scat_counts"])
+            ssm = np.asarray(self.state["scat_sums"])
+            spres = np.asarray(self.state["scat_present"])
+            for w, worker in enumerate(op.workers):
+                worker.state.load_dense(cnt[w], sm[w], pres[w])
+                worker.scattered.load_dense(scnt[w], ssm[w], spres[w])
+        if self.kind == "sink":
+            self.sync_sink_counts()
+            parts = [ch.to_host() for ch in self.staged]
+            if parts:
+                k = np.concatenate([p[0] for p in parts])
+                v = np.concatenate([p[1] for p in parts])
+            else:
+                k = np.zeros(0, np.int64)
+                v = np.zeros(0, np.float64)
+            op.workers[0].queue.restore((k, v), int(self.received[0]))
+        self.sync_stats()
+        self.routing.sync_counters()
+        self._host_fresh = True
+
+    def mark_state_stale(self) -> None:
+        """The host copies were mutated (migration / merge / restore):
+        reload the device state from them before the next dispatch.
+
+        The reload itself is deferred (``_reload_pending``) so a rewrite
+        migrating m keys — m ``migrate_state`` calls, each guarded by a
+        sync/stale pair — costs one download and one upload, not m."""
+        if self.state is None:
+            return
+        self.routing.sync_counters()
+        self.routing._count_owner = None
+        self._host_fresh = False
+        self._reload_pending = True
+        self._consts_version = -1
+
+    def on_restore(self) -> None:
+        """Checkpoint restore rewrote every host structure: drop the
+        device state and re-upload from the restored host truth.
+
+        The reload is eager — a restored backlog must be poppable on the
+        very next tick even if no new chunk ever arrives (sources may
+        already be exhausted), so waiting for the next ``stage`` would
+        stall END propagation forever.
+        """
+        self.state = None
+        self.consts = None
+        self._consts_version = -1
+        self.staged, self.staged_live = [], 0
+        for w, worker in enumerate(self.op.workers):
+            self.lens[w] = len(worker.queue)
+            self.received[w] = worker.queue.received_total
+        if self.kind == "sink":
+            self.lens[:] = 0
+        if not self.op.finished:
+            self._ensure_ready()    # re-upload rings/state/backlog now

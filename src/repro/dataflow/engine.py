@@ -35,10 +35,17 @@ subsystem (:mod:`repro.dataflow.exchange`): one backend call per chunk
 returns a :class:`~repro.dataflow.exchange.ScatterPlan` — destinations,
 per-worker histogram, and a stable destination-grouping placement — so a
 send is a single partition→rank→scatter pass with no separate sort.  The
-partition backend — ``"numpy"`` (default) or ``"pallas"`` (the TPU
-exchange kernel; bit-identical destinations) — is chosen per engine via
-``Engine(partition_backend=...)`` or globally via the
-``REPRO_PARTITION_BACKEND`` environment variable.
+partition backend — ``"numpy"`` (default) or ``"pallas"`` (the
+device-resident exchange plane; bit-identical destinations) — is chosen
+per engine via ``Engine(partition_backend=...)`` or globally via the
+``REPRO_PARTITION_BACKEND`` environment variable.  Under the pallas
+plane, every eligible edge (single-upstream Filter / Project / GroupBy /
+Sink destination) is promoted into :mod:`repro.dataflow.device`: one
+persistent jitted step per edge advances device-resident chunks, ring
+queues, split counters and keyed folds for a whole super-tick, and the
+host materializes state only at the boundaries ``_fusible_ticks``
+computes (``Engine(device_executor=...)`` picks the jitted step vs the
+bit-identical numpy host twin; default: jit on TPU, twin off TPU).
 ``Engine(reference=True)`` swaps in the pre-refactor tuple-at-a-time
 oracle (:mod:`repro.dataflow.reference`) for equivalence tests and
 benchmark baselines.
@@ -71,7 +78,8 @@ from ..core.controller import ReshapeController
 from ..core.partitioner import RoutingTable
 from ..core.state_migration import choose_strategy
 from ..core.types import MigrationStrategy, ReshapeConfig, StateMutability, TransferMode
-from .exchange import BackendSpec, Exchange
+from .device import DeviceChunk
+from .exchange import BackendSpec, DeviceExchange, Exchange
 from .operators import Operator, Sink
 from .tuples import Chunk, concat
 
@@ -117,6 +125,9 @@ class Edge:
     def __init__(self, dst: Operator, num_keys: int, *, init: str = "hash",
                  backend: BackendSpec = None, reference: bool = False):
         self.dst = dst
+        #: which plane carries this edge ("jit" | "host-twin" | None =
+        #: the per-chunk backend exchange); set by Engine._wire_device.
+        self.device_plane: Optional[str] = None
         self.routing = RoutingTable(num_keys, dst.num_workers, init=init)
         dst.ensure_key_stats(num_keys)
         dst.owner_of = self.routing.owner           # shared view
@@ -145,12 +156,20 @@ class Edge:
         """Per-worker tuples routed over this edge (the backend histogram)."""
         return self.exchange.sent_per_worker
 
-    def send(self, chunk: Chunk) -> None:
+    def send(self, chunk) -> None:
+        if (isinstance(chunk, DeviceChunk)
+                and not isinstance(self.exchange, DeviceExchange)):
+            # Device -> host plane boundary: materialize + compact.
+            chunk = chunk.to_host()
         self.exchange.send(chunk)
 
     # ---- state-migration synchronization (paper §5, Fig. 10) ---------- #
     def _on_rewrite(self, keys: List[int], old_rows: np.ndarray, new_rows: np.ndarray) -> None:
         op = self.dst
+        # A rewrite is a materialization boundary for the device plane:
+        # migrations below read/write host keyed state, and the new table
+        # (+ may_scatter arming) re-uploads before the next dispatch.
+        op._device_sync()
         # From now on arrivals may land off-owner: stateful operators must
         # run the owned/scattered mask (skipped pre-rewrite, hash init).
         op.may_scatter = True
@@ -259,10 +278,18 @@ class Engine:
     """
 
     def __init__(self, *, partition_backend: BackendSpec = None,
-                 reference: bool = False, batch_ticks: int = 1):
+                 reference: bool = False, batch_ticks: int = 1,
+                 device_executor: Optional[str] = None,
+                 device_use_kernel: bool = False):
         self.partition_backend = partition_backend
         self.reference = bool(reference)
         self.batch_ticks = max(1, int(batch_ticks))
+        #: device-plane executor override: "jit" forces the fused jitted
+        #: step off-TPU (correctness/CI mode), "host" forces the host
+        #: twin, None resolves by backend (jit on TPU).  Only consulted
+        #: when ``partition_backend`` selects the pallas plane.
+        self.device_executor = device_executor
+        self.device_use_kernel = bool(device_use_kernel)
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []
@@ -291,7 +318,42 @@ class Engine:
         producer.out_edge = edge
         self.edges.append(edge)
         self.upstreams.setdefault(consumer.name, []).append(producer)
+        self._wire_device(edge, consumer)
         return edge
+
+    def _wire_device(self, edge: Edge, consumer: Operator) -> None:
+        """Promote an eligible pallas edge into the device-resident plane.
+
+        Eligible: the edge resolved to the pallas backend and the
+        destination is a single-upstream Filter / Project / GroupByAgg /
+        Sink with a bounded (worker x key) fold.  Executor "jit" attaches
+        a :class:`~repro.dataflow.device.DeviceOpRuntime` (the fused
+        jitted step); "host" (the off-TPU default) swaps in the fused
+        numpy exchange — the bit-identical host twin.  Ineligible edges
+        keep the per-chunk pallas backend.
+        """
+        from .exchange import PallasPartitionBackend
+        if self.reference or not isinstance(
+                getattr(edge.exchange, "backend", None),
+                PallasPartitionBackend):
+            return
+        from . import device as dev
+        if consumer.device is not None and \
+                len(self.upstreams[consumer.name]) > 1:
+            consumer.device.demote("multiple upstreams")
+            return
+        if (len(self.upstreams[consumer.name]) > 1
+                or not dev.wireable(consumer, edge.routing.num_keys)):
+            return
+        if dev.resolve_executor(self.device_executor) == "jit":
+            runtime = dev.DeviceOpRuntime(consumer, edge, self,
+                                          use_kernel=self.device_use_kernel)
+            consumer.device = runtime
+            edge.exchange = DeviceExchange(edge.routing, consumer, runtime)
+            edge.device_plane = "jit"
+        else:
+            edge.exchange = Exchange(edge.routing, consumer, "numpy")
+            edge.device_plane = "host-twin"
 
     def attach_controller(
         self,
@@ -329,7 +391,7 @@ class Engine:
             if isinstance(node, Source):
                 left += node.remaining
             else:
-                left += sum(len(w.queue) for w in node.workers)
+                left += node.backlog_total()
                 frontier.extend(self.upstreams.get(node.name, []))
         return left
 
@@ -378,6 +440,12 @@ class Engine:
                                      else concat(outs))
         # 4 + 5. controllers and sink snapshot, through every covered tick
         # (interior ticks are no-ops when k came from _fusible_ticks).
+        # The window end is a control boundary: drain device-resident
+        # per-key arrival stats for monitored operators so the metric
+        # rounds read exactly what the host plane would have folded.
+        for att in self.controllers:
+            if att.op.device is not None:
+                att.op.device.sync_stats()
         for t in range(t0, t0 + k):
             for att in self.controllers:
                 if not att.op.finished:

@@ -32,25 +32,46 @@ results (paper §4) identical across backends and the reference plane.
 
 Backends
 --------
-``numpy``   (default) the host path: ``RoutingTable.advance_counters`` +
-            the canonical fixed-point inverse-CDF rule, pure numpy.  Its
-            grouping permutation comes from :func:`scatter_order`: numpy's
-            stable integer argsort on the int16-cast destinations, which
-            for small integers *is* a two-pass counting (radix) scatter —
-            O(n + W), not a comparison sort — measured faster than any
-            vectorized rank composition at every (n, W) we run.
-``pallas``  the device path: :func:`repro.kernels.partition
-            .partition_scatter` (interpret mode off TPU) emits the
-            within-destination rank from VMEM-scratch running per-worker
-            counters alongside destinations and the histogram, so the
-            host performs no sort at all — one scatter per column into
-            ``cumsum(hist)`` slots.  Destinations are bit-identical to
-            the numpy backend (see the canonical-rule note in
-            :mod:`repro.core.partitioner`).
+``numpy``   (default) the host plane: ``RoutingTable.advance_counters``
+            + the canonical fixed-point inverse-CDF rule, pure numpy.
+            Its grouping permutation comes from :func:`scatter_order`:
+            numpy's stable integer argsort on the int16-cast
+            destinations, which for small integers *is* a two-pass
+            counting (radix) scatter — O(n + W), not a comparison sort.
+            Past ``MAX_RADIX_WORKERS`` a full-width stable argsort keeps
+            correctness (one-time RuntimeWarning: it is a comparison
+            sort again).
+``pallas``  the device-resident plane.  Per *eligible* edge — a
+            single-upstream Filter / Project / GroupByAgg / Sink
+            destination — the engine promotes the whole edge into
+            :mod:`repro.dataflow.device`: chunks, ring queues, the
+            float32 row-CDF, per-key split counters and the downstream
+            keyed fold live as ``jnp`` arrays across a ``batch_ticks``
+            super-tick, advanced by one persistent jitted step (donated
+            buffers) that fuses partition → within-destination rank →
+            ring scatter → budgeted pop → vectorized fold in a single
+            dispatch per edge; the host reads back only O(num_workers)
+            control metrics per dispatch and materializes state at the
+            boundaries ``Engine._fusible_ticks`` already computes (sink
+            snapshots, controller metric rounds, checkpoints, END,
+            rewrites).  On TPU the partition core is the fused Pallas
+            :func:`repro.kernels.partition.partition_scatter` /
+            ``partition_scatter_fold`` kernel; off TPU the plane runs
+            its validation twin (``Engine(device_executor=...)`` /
+            ``REPRO_DEVICE_EXECUTOR``: ``"jit"`` forces the jitted step
+            through XLA/interpret for correctness runs, ``"host"`` — the
+            off-TPU default — executes the identical canonical rule via
+            the fused numpy exchange, which the backend-equivalence
+            suite proves bit-identical).  Ineligible edges fall back to
+            this per-chunk :class:`PallasPartitionBackend`, whose
+            ``partition_scatter`` kernel emits each record's
+            within-destination rank so the host does no sort.
 
-Both backends route through the same per-key counters owned by the edge's
-``RoutingTable``, so backends can be swapped mid-run (or compared record
-for record) without perturbing the low-discrepancy sequence.
+Both planes route through the same per-key counters owned by the edge's
+``RoutingTable`` (device-resident counters are materialized on demand via
+``RoutingTable.sync_counters``), so backends can be swapped mid-run — or
+compared record for record — without perturbing the low-discrepancy
+sequence.
 
 Select a backend per engine (``Engine(partition_backend=...)``), per edge,
 or globally via the ``REPRO_PARTITION_BACKEND`` environment variable.
@@ -59,6 +80,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Optional, Tuple, Union
 
 import numpy as np
@@ -70,6 +92,10 @@ from .tuples import Chunk
 #: represent; beyond it the cast would wrap around silently and scatter
 #: records to the wrong workers.
 MAX_RADIX_WORKERS = int(np.iinfo(np.int16).max)
+
+
+#: set once the first wide (> MAX_RADIX_WORKERS) fallback has warned.
+_WARNED_WIDE_FALLBACK = False
 
 
 def scatter_order(dest: np.ndarray, hist: np.ndarray) -> Optional[np.ndarray]:
@@ -86,11 +112,22 @@ def scatter_order(dest: np.ndarray, hist: np.ndarray) -> Optional[np.ndarray]:
     sort, i.e. a two-pass counting scatter in O(n + W) — benchmarked
     faster than one-hot-cumsum rank composition at every (n, W) this
     engine runs.  The cast is guarded: ``hist.size`` (== num_workers)
-    must fit int16 or worker ids would silently wrap.
+    must fit int16 or worker ids would silently wrap; past the limit the
+    full-width stable argsort keeps correctness (O(n log n) comparison
+    sort) and a one-time :class:`RuntimeWarning` flags the perf cliff.
     """
     if np.count_nonzero(hist) <= 1:
         return None
     if hist.size > MAX_RADIX_WORKERS:  # int16 would wrap: fall back wide
+        global _WARNED_WIDE_FALLBACK
+        if not _WARNED_WIDE_FALLBACK:
+            _WARNED_WIDE_FALLBACK = True
+            warnings.warn(
+                f"scatter_order: {hist.size} workers exceeds the int16 "
+                f"radix-sort limit ({MAX_RADIX_WORKERS}); falling back to "
+                f"a full-width stable argsort (correct, but O(n log n) "
+                f"per chunk instead of the counting scatter). "
+                f"(warned once)", RuntimeWarning, stacklevel=2)
         return np.argsort(dest, kind="stable")
     return np.argsort(dest.astype(np.int16), kind="stable")
 
@@ -302,3 +339,34 @@ class Exchange:
         else:  # minimal receive_sorted-only targets (test doubles)
             self.dst.receive_sorted(plan.take(keys), plan.take(vals),
                                     plan.bounds)
+
+
+class DeviceExchange:
+    """Device-plane edge: ``send`` stages the chunk on the accelerator.
+
+    The heavy lifting happens in the destination operator's fused
+    device step (:class:`repro.dataflow.device.DeviceOpRuntime`): one
+    jitted dispatch per super-tick performs partition → rank → ring
+    scatter → budgeted pop → fold for this edge.  ``send`` only stages —
+    a host chunk is uploaded once (padded + masked), a
+    :class:`~repro.dataflow.device.DeviceChunk` from an upstream device
+    operator is adopted zero-copy, so consecutive device edges never
+    round-trip through the host.  ``account`` is fed by the runtime's
+    O(num_workers) per-dispatch metric readback, keeping
+    ``tuples_sent`` / ``sent_per_worker`` exact for checkpoints and
+    controllers.
+    """
+
+    def __init__(self, routing: RoutingTable, dst, runtime):
+        self.routing = routing
+        self.dst = dst
+        self.runtime = runtime
+        self.tuples_sent = 0
+        self.sent_per_worker = np.zeros(routing.num_workers, dtype=np.int64)
+
+    def account(self, hist: np.ndarray) -> None:
+        self.tuples_sent += int(hist.sum())
+        self.sent_per_worker += hist
+
+    def send(self, chunk) -> None:
+        self.runtime.stage(chunk)

@@ -81,6 +81,12 @@ class Operator:
     #: container class for array-backed keyed state (None = plain dict)
     state_factory: Optional[Callable[[int], object]] = None
 
+    #: device-plane runtime (set by the engine when this operator's input
+    #: edge is promoted into :mod:`repro.dataflow.device`); when active,
+    #: queues + keyed state live on the accelerator and ``tick`` runs the
+    #: fused jitted step instead of the host pop/process loop.
+    device = None
+
     def __init__(self, name: str, num_workers: int, service_rate: int):
         self.name = name
         self.num_workers = num_workers
@@ -189,6 +195,11 @@ class Operator:
         outputs."""
         if budget is None:
             budget = self.service_rate
+        if self.device is not None:
+            # Device plane: one fused jitted dispatch (partition → rank →
+            # scatter → budgeted pop → fold/map) replaces the host loop;
+            # stateless outputs are forwarded downstream by the runtime.
+            return self.device.tick(budget)
         outs: List[Chunk] = []
         for w in self.workers:
             keys, vals = w.queue.pop(budget)
@@ -212,11 +223,29 @@ class Operator:
         return []
 
     def queues_empty(self) -> bool:
-        return all(len(w.queue) == 0 for w in self.workers)
+        return self.backlog_total() == 0
+
+    def backlog_total(self) -> int:
+        """Total unprocessed tuples across workers (plane-independent)."""
+        if self.device is not None:
+            return self.device.backlog_total()
+        return sum(len(w.queue) for w in self.workers)
+
+    # -- device-plane boundary helpers ----------------------------------- #
+    def _device_sync(self) -> None:
+        """Materialize device-resident state before the host reads it."""
+        if self.device is not None:
+            self.device.sync_host()
+
+    def _device_stale(self) -> None:
+        """The host mutated keyed state: reload the device copy."""
+        if self.device is not None:
+            self.device.mark_state_stale()
 
     # -- state migration hooks (paper §5) -------------------------------- #
     def state_units(self, wid: int, mode: TransferMode) -> float:
         """Size of the keyed state a mitigation would ship (abstract units)."""
+        self._device_sync()
         return float(sum(self._scope_size(v) for v in self.workers[wid].state.values()))
 
     @staticmethod
@@ -232,6 +261,7 @@ class Operator:
         Returns the number of state units shipped. ``replicate=True`` keeps
         the source copy (immutable state / SBR split-key sharing).
         """
+        self._device_sync()
         moved = 0.0
         s, d = self.workers[src], self.workers[dst]
         for scope in scopes:
@@ -242,6 +272,8 @@ class Operator:
             d.state[scope] = self._copy_scope(val)
             if not replicate:
                 del s.state[scope]
+        if moved:
+            self._device_stale()
         return moved
 
     @staticmethod
@@ -254,9 +286,13 @@ class Operator:
 
     # -- metrics ---------------------------------------------------------- #
     def workloads(self) -> np.ndarray:
+        if self.device is not None:
+            return self.device.workloads()
         return np.array([len(w.queue) for w in self.workers], dtype=np.float64)
 
     def received_totals(self) -> np.ndarray:
+        if self.device is not None:
+            return self.device.received_totals()
         return np.array([w.queue.received_total for w in self.workers], dtype=np.float64)
 
 
@@ -445,6 +481,7 @@ class GroupByAgg(Operator):
         return 1
 
     def state_units(self, wid: int, mode: TransferMode) -> float:
+        self._device_sync()
         return float(len(self.workers[wid].state))
 
     def merge_scattered(self) -> int:
@@ -452,6 +489,7 @@ class GroupByAgg(Operator):
 
         Returns the number of scattered scopes merged (state units moved).
         """
+        self._device_sync()
         moved = 0
         for w in self.workers:
             scat = w.scattered
@@ -466,6 +504,8 @@ class GroupByAgg(Operator):
                 self.workers[int(o)].state.merge_from(scat, sk[owners == o])
             moved += int(sk.size)
             scat.clear()
+        if moved:
+            self._device_stale()
         return moved
 
     def on_end(self):
@@ -559,9 +599,15 @@ class Sink(Operator):
     def snapshot(self, tick: int) -> None:
         self._tick = tick
         if tick % self.snapshot_every == 0:
+            if self.device is not None:
+                # The boundary readback: the result columns leave the
+                # device only on the snapshot grid.
+                self.device.sync_sink_counts()
             self.series.append((tick, self.counts.copy()))
 
     def on_end(self):
         self.finished = True
+        if self.device is not None:
+            self.device.sync_host()
         self.series.append((self._tick + 1, self.counts.copy()))
         return []

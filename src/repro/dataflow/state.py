@@ -74,6 +74,25 @@ class AggStore:
         self.sums[:] = 0
         self.present[:] = False
 
+    # -- device-plane hooks --------------------------------------------- #
+    def load_dense(self, counts: np.ndarray, sums: np.ndarray,
+                   present: np.ndarray) -> None:
+        """Overwrite from dense columns (device -> host materialization).
+
+        The device exchange plane folds a worker's aggregates in dense
+        ``[num_scopes]`` device columns and lazily materializes them here
+        at host boundaries (checkpoints, END merges, migrations); the
+        mapping protocol and everything built on it then operate on the
+        exact same state a host-plane run would hold.
+        """
+        self.counts[:] = counts
+        self.sums[:] = sums
+        self.present[:] = present
+
+    def export_dense(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Dense columns for the device fold (host -> device upload)."""
+        return self.counts, self.sums, self.present
+
     # -- mapping protocol (control plane / tests / checkpoints) --------- #
     def __contains__(self, k: int) -> bool:
         return bool(self.present[k])

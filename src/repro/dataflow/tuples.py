@@ -22,6 +22,18 @@ def empty_chunk() -> Chunk:
     return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64)
 
 
+def ring_span(head: int, length: int, cap: int) -> np.ndarray:
+    """Wrap-aware element indices of a ring segment ``[head, head+length)``.
+
+    The device exchange plane (:mod:`repro.dataflow.device`) backs each
+    worker's queue with a fixed-capacity device ring addressed by
+    monotone head/tail counters; this is the shared host-side address
+    rule for materializing such a segment (checkpoint cuts, capacity
+    regrowth) so host and device views of a ring can never disagree.
+    """
+    return (int(head) + np.arange(int(length))) % int(cap)
+
+
 def first_col(vals: np.ndarray) -> np.ndarray:
     """Scalar payload column of a 1-D or 2-D value array."""
     return vals if vals.ndim == 1 else vals[:, 0]

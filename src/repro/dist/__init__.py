@@ -1,0 +1,14 @@
+"""Distribution utilities: sharding rules + gradient compression.
+
+Single-host build: :mod:`.sharding` derives pspec pytrees that replicate
+parameters (every leaf ``P()``) and shard only the batch dimension over the
+``data`` mesh axis — structurally complete (pspec pytrees zip exactly with
+the param/opt pytrees, so pjit wiring in :mod:`repro.train.trainer` and
+:mod:`repro.launch.dryrun` lowers unchanged) while deferring real tensor
+parallel placement to a multi-host build.  :mod:`.compression` is the
+error-feedback int8 gradient compressor used by
+``TrainConfig(grad_compression=True)``.
+"""
+from . import compression, sharding
+
+__all__ = ["compression", "sharding"]

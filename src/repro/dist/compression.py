@@ -1,0 +1,45 @@
+"""Error-feedback gradient compression (int8 uniform quantization).
+
+Each leaf is quantized to 257 levels (symmetric int8) of a per-tensor
+scale, and the quantization residual is carried to the next step
+(``err``), so the *cumulative* dequantized gradient telescopes to the
+cumulative true gradient within one quantization step — the standard
+error-feedback guarantee that keeps SGD/AdamW convergence intact.  All
+ops are jnp, so ``compress_tree`` runs inside the jitted train step.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: quantization half-range: values map to integers in [-LEVELS, LEVELS].
+LEVELS = 127.0
+
+
+def init_error(params: Any) -> Any:
+    """Zero residual tree matching ``params`` (float32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g: jnp.ndarray, e: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = g.astype(jnp.float32) + e
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / LEVELS, jnp.float32(1.0))
+    deq = jnp.round(x / scale) * scale
+    return deq.astype(g.dtype), (x - deq).astype(jnp.float32)
+
+
+def compress_tree(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Quantize a gradient pytree with error feedback.
+
+    Returns ``(dequantized_grads, new_err)``; ``new_err`` must be fed back
+    on the next call so the residual telescopes (unbiased over time).
+    """
+    flat = jax.tree.map(_compress_leaf, grads, err)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err

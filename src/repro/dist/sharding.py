@@ -1,0 +1,123 @@
+"""Sharding rules: pspec pytrees for params, optimizer state and batches.
+
+The contract the sharding tests verify is structural *and* arithmetic:
+every pspec pytree zips exactly with the corresponding parameter /
+optimizer / cache pytree (pspecs are derived through ``jax.eval_shape``
+over the same init functions, so they can never drift from the model
+code), and a dimension is only ever sharded when it divides by the
+product of its mesh axis sizes — on a mesh where a dim does not divide,
+the rule degrades to replication instead of failing to lower.
+
+Placement policy (single-host-safe, production-mesh-ready):
+
+  params     embedding rows over ``model`` (the classic vocab shard);
+             everything else replicated until tensor-parallel rules land
+  optimizer  ZeRO-1: each moment leaf additionally shards its first
+             free (unsharded, divisible) dim over the ``data`` axes
+  batches    leading (batch) dim over the data axes (``pod`` + ``data``
+             when a pod super-axis is present)
+  cache      decode caches are batch-major: leading dim like batches
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: mesh axes that may carry the batch dimension, outermost first.
+DATA_AXES: Tuple[str, ...] = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def _axis_size(mesh, axes) -> int:
+    shape = getattr(mesh, "shape", {})
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= int(shape.get(a, 1))
+    return n
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the batch dimension shards over."""
+    shape = getattr(mesh, "shape", {})
+    return tuple(a for a in DATA_AXES if a in shape) or ("data",)
+
+
+def param_pspecs(cfg, mesh) -> Any:
+    """PartitionSpec pytree matching ``init_params(cfg, key)`` exactly."""
+    from ..models import model as model_lib
+
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = jax.tree.map(lambda _: P(), shapes)
+    embed = shapes.get("embed") if isinstance(shapes, dict) else None
+    if embed is not None and embed.shape[0] % _axis_size(mesh, MODEL_AXIS) == 0:
+        specs["embed"] = P(MODEL_AXIS, None)
+    return specs
+
+
+def _add_zero1_axis(spec: P, sds, mesh) -> P:
+    """ZeRO-1: shard the first free divisible dim of a moment leaf over
+    the data axes (on top of whatever the param spec already shards)."""
+    dp = data_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    entries = list(tuple(spec)) + [None] * (len(sds.shape) - len(tuple(spec)))
+    for i, (ax, dim) in enumerate(zip(entries, sds.shape)):
+        if ax is None and dim % dp_size == 0 and dp_size > 1:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+    return spec
+
+
+def opt_pspecs(pspec: Any, params_sds: Any, mesh) -> Any:
+    """Optimizer-moment pspecs: param placement + the ZeRO-1 data axis."""
+    return jax.tree.map(lambda sp, sds: _add_zero1_axis(sp, sds, mesh),
+                        pspec, params_sds,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _leading_dim_spec(sds, mesh) -> P:
+    dp = data_axes(mesh)
+    if len(sds.shape) >= 1 and sds.shape[0] % _axis_size(mesh, dp) == 0:
+        return P(dp, *([None] * (len(sds.shape) - 1)))
+    return P()
+
+
+def batch_pspecs(cfg, spec, mesh) -> "_BatchSpecs":
+    """Batch pspecs: leading (batch) dim sharded over the data axes."""
+    return _BatchSpecs(P(data_axes(mesh), None))
+
+
+def cache_pspecs(cfg, spec, mesh) -> Any:
+    """Decode-cache pspecs, zipped against ``init_cache``'s tree."""
+    from ..models import init_cache
+
+    sds = jax.eval_shape(lambda: init_cache(cfg, 8, 16))
+    return jax.tree.map(lambda s: _leading_dim_spec(s, mesh), sds)
+
+
+class _BatchSpecs(Mapping):
+    """Uniform per-key batch spec (any key -> the same leading-dim spec).
+
+    ``PartitionSpec`` with fewer entries than the array rank replicates
+    the remaining dims, so one spec covers every batch leaf.
+    """
+
+    def __init__(self, spec: P):
+        self._spec = spec
+
+    def __getitem__(self, key) -> P:
+        return self._spec
+
+    def __iter__(self):
+        return iter(())
+
+    def __len__(self) -> int:
+        return 0
+
+
+def shardings_of(spec_tree: Any, mesh) -> Any:
+    """Map a pspec pytree to ``NamedSharding`` leaves on ``mesh``."""
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

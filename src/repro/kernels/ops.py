@@ -61,6 +61,22 @@ def partition_scatter(keys, counters, weights, cdf=None, *,
                                    interpret=_default_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def partition_scatter_fold(keys, counters, vals, weights, valid=None,
+                           cdf=None, *, block_n: int = 1024):
+    """Fully fused exchange + downstream fold (device-resident plane).
+
+    (dest [N], rank [N], hist [W], fold_counts [K], fold_sums [K]) in one
+    kernel pass: partition, within-destination rank *and* the chunk's
+    per-key GroupByAgg bincount fold, with ``valid`` masking the dead
+    lanes of padded device chunks.
+    """
+    return _part.partition_scatter_fold(keys, counters, vals, weights,
+                                        valid=valid, cdf=cdf,
+                                        block_n=block_n,
+                                        interpret=_default_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
 def segment_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
                    block_k: int = 128):

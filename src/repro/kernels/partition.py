@@ -10,6 +10,11 @@ records) from the same VMEM-scratch running per-worker counters that
 accumulate the histogram, so the host exchange can place every record at
 ``cumsum(hist)[dest] + rank`` with one vectorized add — the full
 partition→rank→scatter pipeline in a single kernel pass, no host sort.
+:func:`partition_scatter_fold` goes one stage further for the
+device-resident exchange plane (:mod:`repro.dataflow.device`): the same
+pass also accumulates the downstream GroupByAgg bincount fold (per-key
+record counts + val sums) in VMEM scratch, with a validity mask so the
+plane's padded, masked chunks never perturb ranks, histogram or fold.
 
 TPU adaptation of a hash-exchange: instead of per-tuple pointer chasing,
 destinations come from an inverse-CDF lookup (records x workers compare —
@@ -61,7 +66,7 @@ def _partition_kernel(keys_ref, counters_ref, cdf_ref, dest_ref, hist_ref,
     idx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 0)
     valid = idx < n_valid
     hist_acc[...] += jnp.where(valid, onehot, False).astype(jnp.int32).sum(
-        axis=0, keepdims=True)
+        axis=0, keepdims=True).astype(jnp.int32)
 
     @pl.when(i == n_blocks - 1)
     def _finish():
@@ -147,15 +152,70 @@ def _partition_scatter_kernel(keys_ref, counters_ref, cdf_ref, dest_ref,
     onehot = jnp.where(idx < n_valid, onehot, False).astype(jnp.int32)
     # rank = per-worker count carried in from earlier blocks (the running
     # VMEM counters) + exclusive within-block prefix, read off at each
-    # record's own destination column via the one-hot row.
+    # record's own destination column via the one-hot row.  Stores cast
+    # explicitly: with jax x64 enabled, integer sums promote to int64
+    # (numpy semantics) and VMEM ref swaps reject the mismatch.
     prev = hist_acc[...]                                 # [1, W]
     within = jnp.cumsum(onehot, axis=0) - onehot         # exclusive prefix
-    rank_ref[...] = ((within + prev) * onehot).sum(axis=1)
-    hist_acc[...] = prev + onehot.sum(axis=0, keepdims=True)
+    rank_ref[...] = ((within + prev) * onehot).sum(axis=1).astype(jnp.int32)
+    hist_acc[...] = (prev
+                     + onehot.sum(axis=0, keepdims=True)).astype(jnp.int32)
 
     @pl.when(i == n_blocks - 1)
     def _finish():
         hist_ref[...] = hist_acc[...]
+
+
+def _partition_scatter_fold_kernel(keys_ref, counters_ref, vals_ref,
+                                   valid_ref, cdf_ref, dest_ref, rank_ref,
+                                   hist_ref, cnt_ref, sum_ref, hist_acc,
+                                   cnt_acc, sum_acc, *, bn: int,
+                                   n_workers: int, n_keys: int,
+                                   n_blocks: int, n_valid: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_acc[...] = jnp.zeros_like(hist_acc)
+        cnt_acc[...] = jnp.zeros_like(cnt_acc)
+        sum_acc[...] = jnp.zeros_like(sum_acc)
+
+    keys = keys_ref[...]                                 # [bn]
+    u = ld_thresholds(counters_ref[...])                 # [bn] in [0, 1)
+    rows = cdf_ref[keys]                                 # [bn, W] gather
+    dest = jnp.sum(u[:, None] >= rows, axis=1).astype(jnp.int32)
+    dest = jnp.minimum(dest, n_workers - 1)
+    dest_ref[...] = dest
+    # A lane is live iff the caller's validity mask is set *and* it is not
+    # suffix padding; dead lanes advance neither ranks nor any fold.
+    idx = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn,), 0)
+    live = (valid_ref[...] != 0) & (idx < n_valid)       # [bn]
+    onehot = (dest[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bn, n_workers), 1))
+    onehot = jnp.where(live[:, None], onehot, False).astype(jnp.int32)
+    prev = hist_acc[...]                                 # [1, W]
+    within = jnp.cumsum(onehot, axis=0) - onehot         # exclusive prefix
+    # explicit dtype stores: with jax x64 enabled, integer sums promote
+    # to int64 (numpy semantics) and VMEM ref swaps reject the mismatch
+    rank_ref[...] = ((within + prev) * onehot).sum(axis=1).astype(jnp.int32)
+    hist_acc[...] = (prev
+                     + onehot.sum(axis=0, keepdims=True)).astype(jnp.int32)
+    # Downstream GroupByAgg bincount fold, fused into the same pass: the
+    # chunk's per-key record counts and val sums (live lanes only).
+    keyhot = (keys[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bn, n_keys), 1))
+    keyhot = jnp.where(live[:, None], keyhot, False)
+    cnt_acc[...] = (cnt_acc[...] + keyhot.astype(jnp.int32).sum(
+        axis=0, keepdims=True)).astype(jnp.int32)
+    sum_acc[...] = (sum_acc[...] + jnp.where(
+        keyhot, vals_ref[...][:, None], 0.0).sum(
+            axis=0, keepdims=True)).astype(jnp.float32)
+
+    @pl.when(i == n_blocks - 1)
+    def _finish():
+        hist_ref[...] = hist_acc[...]
+        cnt_ref[...] = cnt_acc[...]
+        sum_ref[...] = sum_acc[...]
 
 
 def partition_scatter(
@@ -216,3 +276,90 @@ def partition_scatter(
         interpret=interpret,
     )(keys, counters, cdf.astype(jnp.float32))
     return dest[:N], rank[:N], hist[0]
+
+
+def partition_scatter_fold(
+    keys: jnp.ndarray,              # [N] int32
+    counters: jnp.ndarray,          # [N] int32 per-key running index
+    vals: jnp.ndarray,              # [N] float32 payload column
+    weights: jnp.ndarray,           # [K, W] row-stochastic routing table
+    *,
+    valid: Optional[jnp.ndarray] = None,  # [N] mask (None = all live)
+    cdf: Optional[jnp.ndarray] = None,    # [K, W] float32 row-CDF override
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fully fused exchange + downstream fold, one kernel pass.
+
+    Returns ``(dest [N] i32, rank [N] i32, hist [W] i32,
+    fold_counts [K] i32, fold_sums [K] f32)``: the :func:`partition_scatter`
+    outputs plus the chunk's per-key GroupByAgg bincount fold (record count
+    and val sum per key), accumulated in the same VMEM scratch sweep that
+    builds the histogram — the device-resident exchange plane's streaming
+    fast path, where a chunk is partitioned, placed *and* folded into
+    keyed aggregates in a single dispatch with no host round-trip.
+
+    ``valid`` marks live lanes (the device plane carries padded, masked
+    chunks between fused operators); dead lanes still get a destination
+    (garbage, unread) but advance neither ranks, histogram nor fold.
+    Per-key fold rather than per-(worker, key): under owner routing a
+    key's records all land on its owner, so ``fold[k]`` *is* worker
+    ``owner[k]``'s fold — the general budget-gated/scattered form lives
+    in the jnp step of :mod:`repro.dataflow.device`.
+    """
+    N = keys.shape[0]
+    K, W = weights.shape
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    if N == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((W,), jnp.int32), jnp.zeros((K,), jnp.int32),
+                jnp.zeros((K,), jnp.float32))
+    keys = keys.astype(jnp.int32)
+    counters = counters.astype(jnp.int32)
+    vals = vals.astype(jnp.float32)
+    valid = (jnp.ones((N,), jnp.int32) if valid is None
+             else valid.astype(jnp.int32))
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        zpad = jnp.zeros((pad,), jnp.int32)
+        keys = jnp.concatenate([keys, zpad])
+        counters = jnp.concatenate([counters, zpad])
+        valid = jnp.concatenate([valid, zpad])
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), jnp.float32)])
+    n_blocks = (N + pad) // bn
+
+    kernel = functools.partial(_partition_scatter_fold_kernel, bn=bn,
+                               n_workers=W, n_keys=K, n_blocks=n_blocks,
+                               n_valid=N)
+    dest, rank, hist, cnt, sm = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((K, W), lambda i: (0, 0)),      # resident table
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((N + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, W), jnp.int32),
+            jax.ShapeDtypeStruct((1, K), jnp.int32),
+            jax.ShapeDtypeStruct((1, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.int32),
+                        pltpu.VMEM((1, K), jnp.int32),
+                        pltpu.VMEM((1, K), jnp.float32)],
+        interpret=interpret,
+    )(keys, counters, vals, valid, cdf.astype(jnp.float32))
+    return dest[:N], rank[:N], hist[0], cnt[0], sm[0]

@@ -92,6 +92,39 @@ def partition_scatter(keys: jnp.ndarray, counters: jnp.ndarray,
     return dest, within_dest_ranks(dest, weights.shape[1]), hist
 
 
+def partition_scatter_fold(keys: jnp.ndarray, counters: jnp.ndarray,
+                           vals: jnp.ndarray, weights: jnp.ndarray,
+                           valid: jnp.ndarray = None,
+                           cdf: jnp.ndarray = None):
+    """Oracle of the fully fused exchange + downstream fold.
+
+    Returns ``(dest [N], rank [N], hist [W], fold_counts [K],
+    fold_sums [K])``: the :func:`partition_scatter` outputs plus the
+    chunk's per-key GroupByAgg bincount fold over live lanes.  ``valid``
+    masks dead lanes (padded device chunks); dead lanes get a (unused)
+    destination but advance neither ranks, histogram nor fold.
+    """
+    from ..core.ops import ld_thresholds, saturated_cdf32, within_dest_ranks
+
+    K, W = weights.shape
+    live = (jnp.ones(keys.shape, bool) if valid is None
+            else valid.astype(bool))
+    u = ld_thresholds(counters)
+    if cdf is None:
+        cdf = saturated_cdf32(weights)
+    dest = jnp.sum(u[:, None] >= cdf.astype(jnp.float32)[keys],
+                   axis=1).astype(jnp.int32)
+    dest = jnp.minimum(dest, W - 1)
+    lanes = live.astype(jnp.int32)
+    hist = jnp.sum(jax.nn.one_hot(dest, W, dtype=jnp.int32)
+                   * lanes[:, None], axis=0)
+    rank = within_dest_ranks(dest, W, valid=lanes)
+    keyhot = jax.nn.one_hot(keys, K, dtype=jnp.float32) * lanes[:, None]
+    cnt = keyhot.sum(axis=0).astype(jnp.int32)
+    sm = (keyhot * vals.astype(jnp.float32)[:, None]).sum(axis=0)
+    return dest, rank * lanes, hist, cnt, sm
+
+
 def segment_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped expert matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),

@@ -1,0 +1,45 @@
+"""Bench bit-rot guard: ``python -m benchmarks.run --smoke`` must pass.
+
+Runs every registered benchmark at tiny sizes in a subprocess and
+asserts each completes and emits a non-empty, parseable table; the
+engine-throughput bench must additionally produce schema-valid perf JSON
+(mode/workers/chunk/tuples_per_sec + git_sha/jax_backend/timestamp).
+Numbers are meaningless in smoke mode — only the plumbing is under test
+— and the repo-root ``BENCH_engine_throughput.json`` trajectory is never
+touched (smoke JSON goes to the scratch results dir).
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_bench_smoke_all_registered(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["REPRO_BENCH_DIR"] = str(tmp_path)
+    before = os.path.getmtime(os.path.join(REPO,
+                                           "BENCH_engine_throughput.json"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "0 failures" in proc.stdout
+    # every registered bench left a table in the scratch dir
+    from benchmarks.run import BENCHES
+    for name, _, _ in BENCHES:
+        assert (tmp_path / f"{name}.csv").exists(), name
+    # perf-JSON contract (side path; repo-root trajectory untouched)
+    rows = json.loads((tmp_path
+                       / "BENCH_engine_throughput.smoke.json").read_text())
+    assert rows and all(
+        {"mode", "workers", "chunk", "tuples_per_sec", "plane", "git_sha",
+         "jax_backend", "timestamp"} <= set(r) for r in rows)
+    assert {"reference", "columnar", "numpy", "pallas"} <= {
+        r["mode"] for r in rows}
+    after = os.path.getmtime(os.path.join(REPO,
+                                          "BENCH_engine_throughput.json"))
+    assert before == after

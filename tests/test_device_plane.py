@@ -1,0 +1,408 @@
+"""Device-resident exchange plane tests (the jit executor, forced off-TPU).
+
+The contract under test: with ``Engine(partition_backend="pallas",
+device_executor="jit")`` every eligible edge runs the fused jitted
+super-tick step of :mod:`repro.dataflow.device` — chunks, ring queues,
+routing constants, split counters and keyed folds device-resident, one
+dispatch per edge, boundary-only materialization — and the run is
+**bit-identical** to the numpy host plane: ``Sink.series`` (tick grid +
+integer counts), ``sent_per_worker``, per-key routing counters, GroupBy
+keyed counts, queue contents at checkpoint cuts, and controller event
+streams.  Off-TPU the *default* executor is the host twin (same
+canonical rule through the fused numpy exchange); that default is pinned
+here too.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import ReshapeConfig
+from repro.dataflow import checkpoint as ckpt
+from repro.dataflow.engine import Engine, Source
+from repro.dataflow.exchange import DeviceExchange
+from repro.dataflow.operators import Filter, GroupByAgg, Project, Sink
+
+
+def _series_equal(a, b):
+    return (len(a) == len(b)
+            and all(t1 == t2 and np.array_equal(c1, c2)
+                    for (t1, c1), (t2, c2) in zip(a, b)))
+
+
+def _all_pass(k, v):
+    return v >= 0
+
+
+def _half_pass(k, v):
+    return v >= 5.0
+
+
+def _proj(k, v):
+    return k, v * 2.0
+
+
+def _zipf_stream(n, num_keys, seed=0, hot_frac=0.0):
+    rng = np.random.default_rng(seed)
+    keys = np.minimum(rng.zipf(1.3, n) - 1, num_keys - 1).astype(np.int64)
+    if hot_frac:
+        keys[rng.random(n) < hot_frac] = 0
+    return keys, rng.uniform(0.0, 10.0, n)
+
+
+def _pipeline(backend=None, *, n=5000, num_keys=24, num_workers=4, chunk=8,
+              batch_ticks=4, predicate=_all_pass, project=None,
+              controller=False, hot_frac=0.0, seed=0, **engine_kw):
+    keys, vals = _zipf_stream(n, num_keys, seed, hot_frac)
+    eng = Engine(partition_backend=backend, batch_ticks=batch_ticks,
+                 **engine_kw)
+    src = eng.add_source(Source("src", keys, vals, num_workers * chunk))
+    filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
+                             predicate=predicate))
+    ops = [filt]
+    if project is not None:
+        ops.append(eng.add_op(Project("proj", num_workers,
+                                      num_workers * chunk, fn=project)))
+    grp = eng.add_op(GroupByAgg("groupby", num_workers, chunk))
+    ops.append(grp)
+    sink = eng.add_op(Sink("sink", num_keys, snapshot_every=batch_ticks))
+    prev = src
+    for op in ops:
+        eng.connect(prev, op, num_keys)
+        prev = op
+    eng.connect(prev, sink, num_keys)
+    ctrl = None
+    if controller:
+        ctrl = eng.attach_controller(grp, ReshapeConfig(metric_period=4))
+    return eng, sink, grp, ctrl
+
+
+def _assert_runs_identical(a, b, *, sync=True):
+    a_eng, a_sink = a[0], a[1]
+    b_eng, b_sink = b[0], b[1]
+    assert a_eng.tick == b_eng.tick
+    assert _series_equal(a_sink.series, b_sink.series)
+    np.testing.assert_array_equal(a_sink.counts, b_sink.counts)
+    for ea, eb in zip(a_eng.edges, b_eng.edges):
+        np.testing.assert_array_equal(ea.sent_per_worker, eb.sent_per_worker)
+        if sync:
+            eb.routing.sync_counters()
+        np.testing.assert_array_equal(ea.routing._count, eb.routing._count)
+
+
+class TestJitPlaneEquivalence:
+    def test_fold_pipeline_bit_identical(self):
+        """Filter -> GroupBy -> Sink, skewed stream, batched scheduler:
+        series / counts / histograms / counters identical to numpy."""
+        a = _pipeline("numpy")
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit")
+        b[0].run()
+        assert all(e.device_plane == "jit" for e in b[0].edges)
+        assert all(isinstance(e.exchange, DeviceExchange)
+                   for e in b[0].edges)
+        _assert_runs_identical(a, b)
+
+    def test_groupby_state_identical(self):
+        a = _pipeline("numpy", predicate=_half_pass)
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit", predicate=_half_pass)
+        b[0].run()
+        _assert_runs_identical(a, b)
+        b[2]._device_sync()
+        for wa, wb in zip(a[2].workers, b[2].workers):
+            assert (dict(wa.state.items()).keys()
+                    == dict(wb.state.items()).keys())
+            for k in wa.state.keys():
+                assert wa.state[k][0] == wb.state[k][0]
+                assert wa.state[k][1] == pytest.approx(wb.state[k][1])
+
+    def test_project_stage_passthrough(self):
+        a = _pipeline("numpy", project=_proj)
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit", project=_proj)
+        b[0].run()
+        assert all(e.device_plane == "jit" for e in b[0].edges)
+        _assert_runs_identical(a, b)
+
+    def test_controller_rewrites_and_migrations(self):
+        """A Reshape controller on the device GroupBy: detections, the
+        two-phase rewrites, scattered folds and migrations replay
+        identically (event stream + counters + per-key counts)."""
+        a = _pipeline("numpy", num_workers=6, controller=True, hot_frac=0.5,
+                      seed=1, n=8000)
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit", num_workers=6,
+                      controller=True, hot_frac=0.5, seed=1, n=8000)
+        b[0].run()
+        _assert_runs_identical(a, b)
+        assert [e.kind for e in a[3].events] == [e.kind for e in b[3].events]
+        assert any(e.kind == "phase2" for e in b[3].events)  # rewrites ran
+        b[2]._device_sync()
+        for wa, wb in zip(a[2].workers, b[2].workers):
+            np.testing.assert_array_equal(wa.state.counts, wb.state.counts)
+            assert not len(wb.scattered)        # merged at END
+
+    def test_w1_mixed_plane_matches_numpy(self):
+        """W1: device filter + sink edges around a host pallas join edge
+        — planes compose, run stays bit-identical."""
+        from repro.dataflow import build_w1
+        kw = dict(strategy="reshape", scale=0.005, num_workers=6,
+                  service_rate=4, batch_ticks=4, snapshot_every=2)
+        a = build_w1(**kw)
+        a.run()
+        b = build_w1(partition_backend="pallas", device_executor="jit", **kw)
+        b.run()
+        planes = [e.device_plane for e in b.engine.edges]
+        assert planes == ["jit", None, "jit"]   # join edge stays per-chunk
+        assert a.engine.tick == b.engine.tick
+        assert _series_equal(a.sink.series, b.sink.series)
+        for ea, eb in zip(a.engine.edges, b.engine.edges):
+            np.testing.assert_array_equal(ea.sent_per_worker,
+                                          eb.sent_per_worker)
+
+    def test_use_kernel_partition_core(self):
+        """device_use_kernel=True routes the partition core through the
+        fused Pallas kernels inside the jitted step (interpret off-TPU)."""
+        a = _pipeline("numpy", n=600, num_keys=12, batch_ticks=2)
+        for e in a[0].edges[:2]:
+            e.routing.split_key(0, [0, 1], [0.5, 0.5])
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit",
+                      device_use_kernel=True, n=600, num_keys=12,
+                      batch_ticks=2)
+        for e in b[0].edges[:2]:
+            e.routing.split_key(0, [0, 1], [0.5, 0.5])
+        b[0].run()
+        assert all(e.device_plane == "jit" for e in b[0].edges)  # no silent
+        _assert_runs_identical(a, b)                             # demotion
+
+    def test_host_twin_is_the_offtpu_default(self):
+        import jax
+        if jax.default_backend() == "tpu":  # pragma: no cover - TPU CI
+            pytest.skip("host twin is the off-TPU default")
+        a = _pipeline("numpy")
+        a[0].run()
+        h = _pipeline("pallas")             # no executor override
+        h[0].run()
+        assert all(e.device_plane == "host-twin" for e in h[0].edges)
+        _assert_runs_identical(a, h)
+
+    def test_mid_run_backend_swap_materializes_counters(self):
+        """A host `route_chunk` on a device-owned table pulls the device
+        counters and continues the low-discrepancy sequence bit-exactly
+        (the backend-swap handshake)."""
+        a = _pipeline("numpy")
+        b = _pipeline("pallas", device_executor="jit")
+        for e in (a[0].edges[1], b[0].edges[1]):
+            e.routing.split_key(0, [0, 1], [0.5, 0.5])
+        for _ in range(4):
+            a[0].run_super_tick(a[0]._fusible_ticks(4))
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        keys = np.zeros(64, dtype=np.int64)
+        np.testing.assert_array_equal(b[0].edges[1].routing.route_chunk(keys),
+                                      a[0].edges[1].routing.route_chunk(keys))
+        np.testing.assert_array_equal(b[0].edges[1].routing._count,
+                                      a[0].edges[1].routing._count)
+        a[0].run()
+        b[0].run()
+        _assert_runs_identical(a, b)
+
+
+class TestJitPlaneDemotion:
+    def test_two_dim_vals_demote_to_host_path(self):
+        eng = Engine(partition_backend="pallas", device_executor="jit")
+        src = eng.add_source(Source("s", np.arange(50) % 8,
+                                    np.ones((50, 2)), 10))
+        filt = eng.add_op(Filter("f", 2, 10,
+                                 predicate=lambda k, v: np.ones(
+                                     k.shape[0], bool)))
+        sink = eng.add_op(Sink("k", 8))
+        eng.connect(src, filt, 8)
+        eng.connect(filt, sink, 8)
+        eng.run()
+        assert all((e.device_plane or "").startswith("demoted")
+                   for e in eng.edges)
+        assert int(sink.counts.sum()) == 50
+
+    def test_untraceable_predicate_demotes_and_replays(self):
+        def impure(k, v):
+            return np.asarray(v) >= 0       # concretizes a tracer
+
+        eng = Engine(partition_backend="pallas", device_executor="jit")
+        src = eng.add_source(Source("s", np.arange(50) % 8, np.ones(50), 10))
+        filt = eng.add_op(Filter("f", 2, 10, predicate=impure))
+        sink = eng.add_op(Sink("k", 8))
+        eng.connect(src, filt, 8)
+        eng.connect(filt, sink, 8)
+        eng.run()
+        assert eng.edges[0].device_plane.startswith("demoted")
+        assert int(sink.counts.sum()) == 50
+        np.testing.assert_array_equal(sink.counts,
+                                      np.bincount(np.arange(50) % 8,
+                                                  minlength=8))
+
+    def test_second_upstream_demotes(self):
+        eng = Engine(partition_backend="pallas", device_executor="jit")
+        s1 = eng.add_source(Source("s1", np.arange(30) % 8, np.ones(30), 10))
+        s2 = eng.add_source(Source("s2", np.arange(30) % 8, np.ones(30), 10))
+        sink = eng.add_op(Sink("k", 8))
+        e1 = eng.connect(s1, sink, 8)
+        assert sink.device is not None
+        e2 = eng.connect(s2, sink, 8)
+        assert sink.device is None          # two upstreams: host fallback
+        eng.run()
+        assert int(sink.counts.sum()) == 60
+
+
+class TestDeviceCheckpoint:
+    """Satellite: checkpoint snapshot/restore under the pallas backend
+    with batch_ticks > 1 — a restore mid-run replays from the last
+    boundary with counters, queues and results bit-identical to numpy."""
+
+    def _build(self, backend, **kw):
+        return _pipeline(backend, num_workers=6, controller=True,
+                         hot_frac=0.4, seed=3, n=6000, **kw)
+
+    def test_restore_mid_super_tick_replays_from_boundary(self):
+        b = self._build("pallas", device_executor="jit")
+        for _ in range(6):
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        snap = ckpt.snapshot(b[0])
+        tick_at_snap = b[0].tick
+        counters_at_snap = [e["routing"]["count"].copy()
+                            for e in snap["edges"]]
+        for _ in range(3):                  # progress past the cut...
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        ckpt.restore(b[0], snap)            # ...fail + recover
+        assert b[0].tick == tick_at_snap
+        for e, want in zip(b[0].edges, counters_at_snap):
+            e.routing.sync_counters()
+            np.testing.assert_array_equal(e.routing._count, want)
+        b[0].run()
+
+        a = self._build("numpy")            # never-failed oracle
+        a[0].run()
+        _assert_runs_identical(a, b)
+
+    def test_restore_with_exhausted_sources_still_drains(self):
+        """Regression: a restore whose snapshot holds backlog but whose
+        sources are already exhausted must eagerly re-upload the restored
+        rings — no new arrival will ever come to trigger a lazy reload,
+        and END propagation would stall forever."""
+        b = self._build("pallas", device_executor="jit")
+        while not all(s.finished for s in b[0].sources):
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        assert b[2].backlog_total() > 0     # skewed backlog remains
+        snap = ckpt.snapshot(b[0])
+        for _ in range(3):
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        ckpt.restore(b[0], snap)
+        ticks = b[0].run(max_ticks=20_000)
+        assert b[0].done() and ticks < 20_000
+        a = self._build("numpy")
+        a[0].run()
+        _assert_runs_identical(a, b)
+
+    def test_streaming_sink_received_mirror_exact(self):
+        """Regression: chunks staged into a device sink before its first
+        allocation must survive in the received mirror (the scratch host
+        queue's zero count must never clobber stage-time accounting)."""
+        def build(backend, **kw):
+            keys, vals = _zipf_stream(2000, 16, seed=7)
+            eng = Engine(partition_backend=backend, batch_ticks=4, **kw)
+            src = eng.add_source(Source("s", keys, vals, 32))
+            filt = eng.add_op(Filter("f", 4, 32, predicate=_all_pass))
+            sink = eng.add_op(Sink("k", 16, snapshot_every=4))
+            eng.connect(src, filt, 16)
+            eng.connect(filt, sink, 16)    # sink streams every super-tick
+            return eng, sink
+        a_eng, a_sink = build("numpy")
+        b_eng, b_sink = build("pallas", device_executor="jit")
+        for _ in range(3):
+            a_eng.run_super_tick(a_eng._fusible_ticks(4))
+            b_eng.run_super_tick(b_eng._fusible_ticks(4))
+        np.testing.assert_array_equal(a_sink.received_totals(),
+                                      b_sink.received_totals())
+        sa, sb = ckpt.snapshot(a_eng), ckpt.snapshot(b_eng)
+        for oa, ob in zip(sa["ops"], sb["ops"]):
+            for wa, wb in zip(oa["workers"], ob["workers"]):
+                assert wa["received"] == wb["received"]
+        a_eng.run()
+        b_eng.run()
+        np.testing.assert_array_equal(a_sink.counts, b_sink.counts)
+
+    def test_sink_demote_with_staged_chunks_keeps_accounting(self):
+        """Regression: demotion with staged-but-undispatched sink chunks
+        must back the stage accounting out *before* materializing the
+        mirror, then replay — received_total and tuples_sent stay true."""
+        eng = Engine(partition_backend="pallas", device_executor="jit")
+        src = eng.add_source(Source("s", np.arange(10, dtype=np.int64) % 8,
+                                    np.ones(10), 10))
+        sink = eng.add_op(Sink("k", 8))
+        edge = eng.connect(src, sink, 8)
+        eng.run_super_tick(1)               # 10 tuples through the sink
+        edge.send((np.arange(6, dtype=np.int64) % 8, np.ones(6)))  # staged
+        # A second upstream wired mid-run demotes the sink while the 6
+        # tuples are still staged-but-undispatched.
+        s2 = eng.add_source(Source("s2", np.arange(4, dtype=np.int64) % 8,
+                                   np.ones(4), 10))
+        eng.connect(s2, sink, 8)
+        assert sink.device is None          # demoted
+        assert edge.tuples_sent == 16
+        assert sink.workers[0].queue.received_total == 16
+        assert len(sink.workers[0].queue) == 6       # staged -> replayed
+        sink.tick()
+        assert int(sink.counts.sum()) == 16
+
+    def test_end_flush_staged_chunks_visible_at_boundary(self):
+        """Regression: a blocking upstream's END flush stages a chunk
+        into a device operator *after* its tick in the same super-tick;
+        a checkpoint cut in that window must still capture the records
+        (the host plane already holds them in the worker queues)."""
+        def build(backend, **kw):
+            keys, vals = _zipf_stream(800, 16, seed=9)
+            eng = Engine(partition_backend=backend, batch_ticks=4, **kw)
+            src = eng.add_source(Source("s", keys, vals, 64))
+            grp = eng.add_op(GroupByAgg("g", 4, 16))
+            filt = eng.add_op(Filter("f", 4, 4, predicate=_all_pass))
+            sink = eng.add_op(Sink("k", 16, snapshot_every=4))
+            eng.connect(src, grp, 16)
+            eng.connect(grp, filt, 16)     # END flush lands here
+            eng.connect(filt, sink, 16)
+            return eng, sink, grp, None
+        a = build("numpy")
+        b = build("pallas", device_executor="jit")
+        for eng in (a[0], b[0]):
+            while not eng.ops[0].finished:     # run through groupby END
+                eng.run_super_tick(eng._fusible_ticks(4))
+        assert b[0].ops[1].backlog_total() > 0  # END flush is in flight
+        sa, sb = ckpt.snapshot(a[0]), ckpt.snapshot(b[0])
+        for oa, ob in zip(sa["ops"], sb["ops"]):
+            for wa, wb in zip(oa["workers"], ob["workers"]):
+                np.testing.assert_array_equal(wa["queue"][0], wb["queue"][0])
+                assert wa["received"] == wb["received"]
+        a[0].run()
+        b[0].run()
+        _assert_runs_identical(a, b)
+
+    def test_snapshot_queue_contents_match_host_plane(self):
+        """The checkpoint cut itself is bit-identical: device rings
+        materialize into the exact queue contents the host plane holds."""
+        a = self._build("numpy")
+        b = self._build("pallas", device_executor="jit")
+        for _ in range(5):
+            a[0].run_super_tick(a[0]._fusible_ticks(4))
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        sa, sb = ckpt.snapshot(a[0]), ckpt.snapshot(b[0])
+        for oa, ob in zip(sa["ops"], sb["ops"]):
+            for wa, wb in zip(oa["workers"], ob["workers"]):
+                np.testing.assert_array_equal(wa["queue"][0], wb["queue"][0])
+                np.testing.assert_allclose(wa["queue"][1], wb["queue"][1])
+                assert wa["received"] == wb["received"]
+                assert wa["processed"] == wb["processed"]
+        for ea, eb in zip(sa["edges"], sb["edges"]):
+            np.testing.assert_array_equal(ea["routing"]["count"],
+                                          eb["routing"]["count"])
+            np.testing.assert_array_equal(ea["sent_per_worker"],
+                                          eb["sent_per_worker"])

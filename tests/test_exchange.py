@@ -299,6 +299,37 @@ class TestFusedScatterStability:
         np.testing.assert_array_equal(dest[order], [0, 5, 39_999, 39_999])
         np.testing.assert_array_equal(order, [3, 1, 0, 2])
 
+    def test_wide_fallback_boundary_and_one_time_warning(self):
+        """The int16 radix cast is used up to exactly MAX_RADIX_WORKERS
+        (32767) workers; one worker more takes the wide stable-argsort
+        fallback and emits a single RuntimeWarning (first crossing only).
+        Both sides of the boundary must produce the identical stable
+        grouping."""
+        import warnings as _warnings
+
+        from repro.dataflow import exchange as _ex
+
+        rng = np.random.default_rng(12)
+        for width in (_ex.MAX_RADIX_WORKERS, _ex.MAX_RADIX_WORKERS + 1):
+            hist = np.zeros(width, dtype=np.int64)
+            dest = rng.integers(0, width, 300).astype(np.int64)
+            np.add.at(hist, dest, 1)
+            _ex._WARNED_WIDE_FALLBACK = False
+            with _warnings.catch_warnings(record=True) as caught:
+                _warnings.simplefilter("always")
+                order = scatter_order(dest, hist)
+                again = scatter_order(dest, hist)   # second call: no rewarn
+            warns = [w for w in caught
+                     if issubclass(w.category, RuntimeWarning)]
+            if width > _ex.MAX_RADIX_WORKERS:
+                assert len(warns) == 1 and "int16" in str(warns[0].message)
+            else:
+                assert not warns
+            oracle = np.argsort(dest, kind="stable")
+            np.testing.assert_array_equal(order, oracle)
+            np.testing.assert_array_equal(again, oracle)
+        _ex._WARNED_WIDE_FALLBACK = False
+
 
 # --------------------------------------------------------------------- #
 # Ring-buffer WorkerQueue: FIFO, zero-copy pops, checkpoint round-trip    #

@@ -155,6 +155,41 @@ def test_partition_scatter_matches_oracle(n_keys, n_workers, seed):
     np.testing.assert_array_equal(pos, inv)
 
 
+@given(
+    n_keys=st.integers(2, 40),
+    n_workers=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_partition_scatter_fold_matches_oracle(n_keys, n_workers, seed):
+    """Fully fused kernel: partition_scatter outputs plus the per-key
+    GroupByAgg bincount fold, with a validity mask gating dead lanes out
+    of ranks, histogram and fold (the device plane moves padded chunks)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    N = int(jax.random.randint(k4, (), 1, 700))
+    keys = jax.random.randint(k1, (N,), 0, n_keys)
+    counters = jax.random.randint(k2, (N,), 0, 10_000)
+    vals = jax.random.uniform(k5, (N,), minval=0.0, maxval=8.0)
+    valid = jax.random.bernoulli(k3, 0.8, (N,)).astype(jnp.int32)
+    weights = jax.random.dirichlet(k3, jnp.ones(n_workers), (n_keys,))
+    d1, r1, h1, c1, s1 = ops.partition_scatter_fold(
+        keys, counters, vals, weights, valid=valid, block_n=256)
+    d2, r2, h2, c2, s2 = ref.partition_scatter_fold(
+        keys, counters, vals, weights, valid=valid)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    # fold vs numpy ground truth on live lanes
+    m = np.asarray(valid).astype(bool)
+    np.testing.assert_array_equal(
+        np.asarray(c1), np.bincount(np.asarray(keys)[m], minlength=n_keys))
+    assert int(np.asarray(h1).sum()) == int(m.sum())
+
+
 # --------------------------------------------------------------------- #
 # segment matmul
 # --------------------------------------------------------------------- #
