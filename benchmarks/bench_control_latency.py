@@ -8,12 +8,14 @@ from repro.dataflow.metrics import PairLoadSampler
 
 from .common import emit
 
+WORKERS = 48
+
 
 def run(scale: float = 0.1):
     rows = []
     for delay in (0, 2, 5, 10, 15):
         cfg = ReshapeConfig(control_delay_ticks=delay)
-        wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+        wf = build_w1(strategy="reshape", scale=scale, num_workers=WORKERS,
                       service_rate=4, cfg=cfg)
         m = wf.meta
         ca = PairLoadSampler(m["ca_worker"], m["az_worker"])
@@ -37,7 +39,8 @@ def run(scale: float = 0.1):
             "ticks": eng.tick,
         })
     emit("control_latency", rows, ["delay_ticks", "lb_ratio_ca",
-                                   "lb_ratio_tx", "ticks"])
+                                   "lb_ratio_tx", "ticks"],
+         size=dict(scale=scale, workers=WORKERS))
     return rows
 
 

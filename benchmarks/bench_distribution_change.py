@@ -10,11 +10,14 @@ from repro.dataflow import build_w4
 
 from .common import emit
 
+WORKERS = 40
+
 
 def run(n_tuples: int = 40_000):
     rows = []
     for strategy in ("flux", "flowjoin", "reshape"):
-        wf = build_w4(strategy=strategy, n_tuples=n_tuples, num_workers=40,
+        wf = build_w4(strategy=strategy, n_tuples=n_tuples,
+                      num_workers=WORKERS,
                       cfg=ReshapeConfig(tau=2000.0) if strategy == "reshape"
                       else None)
         eng = wf.engine
@@ -39,7 +42,8 @@ def run(n_tuples: int = 40_000):
         })
     emit("distribution_change", rows, ["strategy", "ratio_mid",
                                        "ratio_final", "ratio_max",
-                                       "iterations", "ticks"])
+                                       "iterations", "ticks"],
+         size=dict(n_tuples=n_tuples, workers=WORKERS))
     return rows
 
 

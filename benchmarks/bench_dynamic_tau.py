@@ -8,14 +8,16 @@ from repro.dataflow import build_w1
 
 from .common import emit, pair_lb_ratio
 
+WORKERS = 48
+
 
 def run(scale: float = 0.1):
     rows = []
     for tau0 in (10, 50, 100, 500, 1000, 2000):
         for adaptive in (False, True):
             cfg = ReshapeConfig(tau=float(tau0), adaptive_tau=adaptive)
-            wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
-                          service_rate=4, cfg=cfg)
+            wf = build_w1(strategy="reshape", scale=scale,
+                          num_workers=WORKERS, service_rate=4, cfg=cfg)
             m = wf.meta
             lb = pair_lb_ratio(wf.engine, wf.monitored[0], m["ca_worker"],
                                m["az_worker"])
@@ -31,7 +33,8 @@ def run(scale: float = 0.1):
             })
     emit("dynamic_tau", rows, ["tau0", "adaptive", "iterations",
                                "avg_lb_ratio", "lb_per_iteration",
-                               "final_tau"])
+                               "final_tau"], size=dict(scale=scale,
+                                                       workers=WORKERS))
     return rows
 
 

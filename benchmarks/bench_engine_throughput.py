@@ -164,7 +164,7 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
                 speedup_vs_reference=round(tps / ref_tps, 2)))
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
-          "speedup_vs_reference"])
+          "speedup_vs_reference"], size=dict(n_tuples=n_tuples), prov=prov)
     # Perf trajectory for future PRs to diff against (provenance-stamped).
     # Smoke mode validates the JSON contract against a side path so the
     # repo-root trajectory is never clobbered by tiny-n runs.

@@ -8,12 +8,14 @@ from repro.dataflow.metrics import area_under, convergence_tick, ratio_series
 
 from .common import emit
 
+WORKERS = 48
+
 
 def run(scale: float = 0.2):
     rows = []
     for label, enable in (("two_phase", True), ("second_phase_only", False)):
         cfg = ReshapeConfig(enable_phase1=enable)
-        wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+        wf = build_w1(strategy="reshape", scale=scale, num_workers=WORKERS,
                       service_rate=4, cfg=cfg)
         ticks = wf.run()
         m = wf.meta
@@ -27,7 +29,8 @@ def run(scale: float = 0.2):
             "convergence_tick": conv if conv is not None else -1,
         })
     emit("first_phase", rows, ["variant", "ticks", "auc_ratio_dev",
-                               "convergence_tick"])
+                               "convergence_tick"],
+         size=dict(scale=scale, workers=WORKERS))
     return rows
 
 

@@ -40,7 +40,7 @@ def run(scale: float = 0.1):
                          "avg_lb_ratio": round(lb, 3),
                          "ticks": wf.engine.tick})
     emit("heavy_hitter", rows, ["workers", "strategy", "avg_lb_ratio",
-                                "ticks"])
+                                "ticks"], size=dict(scale=scale))
     return rows
 
 

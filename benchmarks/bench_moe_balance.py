@@ -74,7 +74,8 @@ def run():
         })
     emit("moe_balance", rows, ["balancer", "spread_last10", "dropped_last10",
                                "representativeness_last10", "iterations",
-                               "bytes_migrated"])
+                               "bytes_migrated"],
+         size=dict(steps=STEPS, n_tokens=N_TOKENS))
     return rows
 
 

@@ -8,9 +8,11 @@ from repro.dataflow import build_w1
 
 from .common import emit
 
+WORKERS = 48
+
 
 def run(scale: float = 0.1):
-    base = build_w1(strategy="none", scale=scale, num_workers=48,
+    base = build_w1(strategy="none", scale=scale, num_workers=WORKERS,
                     service_rate=4)
     base.run()
     base_rec = base.monitored[0].received_totals()
@@ -19,7 +21,7 @@ def run(scale: float = 0.1):
     for helpers in (1, 2, 4, 8, 16):
         cfg = ReshapeConfig(max_helpers=helpers, migration_rate=2.0,
                             adaptive_tau=False)
-        wf = build_w1(strategy="reshape", scale=scale, num_workers=48,
+        wf = build_w1(strategy="reshape", scale=scale, num_workers=WORKERS,
                       service_rate=4, cfg=cfg, pin_helpers=False)
         wf.run()
         rec = wf.monitored[0].received_totals()
@@ -40,7 +42,8 @@ def run(scale: float = 0.1):
         })
     emit("multi_helpers", rows, ["max_helpers", "helpers_used",
                                  "load_reduction", "migration_ticks",
-                                 "ticks"])
+                                 "ticks"], size=dict(scale=scale,
+                                                     workers=WORKERS))
     return rows
 
 

@@ -9,18 +9,20 @@ from repro.dataflow.metrics import area_under, convergence_tick, ratio_series
 from .common import emit
 
 SCALE = 0.2
+WORKERS = 48
 
 
 def run(scale: float = SCALE):
     rows = []
     for pin_key, pair_name in ((datasets.AZ, "ca_az"), (datasets.IL, "ca_il")):
         for strategy in ("none", "flux", "flowjoin", "reshape"):
-            wf = build_w1(strategy=strategy, scale=scale, num_workers=48,
+            wf = build_w1(strategy=strategy, scale=scale, num_workers=WORKERS,
                           service_rate=4, pin_helpers=False)
             if strategy != "none":
                 # paper §7.2 pins the helper: worker 4 (AZ) / worker 17 (IL)
                 for c in wf.controllers:
-                    c.cfg.pinned_helpers[wf.meta["ca_worker"]] = pin_key % 48
+                    c.cfg.pinned_helpers[wf.meta["ca_worker"]] = (pin_key
+                                                                  % WORKERS)
             ticks = wf.run()
             m = wf.meta
             other = datasets.AZ if pin_key == datasets.AZ else datasets.IL
@@ -40,7 +42,7 @@ def run(scale: float = SCALE):
             })
     emit("user_results", rows,
          ["pair", "strategy", "ticks", "auc_ratio_dev", "convergence_tick",
-          "conv_frac_of_run"])
+          "conv_frac_of_run"], size=dict(scale=scale, workers=WORKERS))
     return rows
 
 

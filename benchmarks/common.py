@@ -53,18 +53,42 @@ def provenance() -> Dict[str, str]:
     )
 
 
-def emit(bench: str, rows: List[Dict], keys: Iterable[str]) -> None:
-    """Print csv rows + persist to results/bench/<bench>.csv."""
+def emit(bench: str, rows: List[Dict], keys: Iterable[str],
+         size: Dict | None = None, prov: Dict | None = None) -> None:
+    """Print csv rows + persist to results/bench/<bench>.csv.
+
+    Smoke runs persist to ``<bench>.smoke.csv`` instead, so tiny-size CI
+    artifacts can never clobber the committed result tables (the perf
+    JSON already had this side path; now every table does).
+
+    Every persisted row is stamped with the bench's effective sizes
+    (``size``, e.g. the scale / n_tuples actually used, which smoke mode
+    shrinks) when they are not already row columns, plus
+    :func:`provenance` fields (git_sha / jax_backend / timestamp), so a
+    committed table is auditable: you can tell from the file alone
+    whether it ran at real sizes and from which commit.  Stdout keeps
+    the compact ``bench,<size columns>,<data columns>`` form, without
+    the provenance columns.
+    """
     keys = list(keys)
+    size_keys = [k for k in (size or {}) if k not in keys]
+    # Callers that stamp provenance into a sibling artifact (the perf
+    # JSON) pass theirs in, so both files of one run carry one timestamp.
+    prov = prov if prov is not None else provenance()
+    fieldnames = size_keys + keys + [k for k in prov if k not in keys]
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{bench}.csv")
+    suffix = ".smoke.csv" if SMOKE else ".csv"
+    path = os.path.join(RESULTS_DIR, f"{bench}{suffix}")
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=keys)
+        w = csv.DictWriter(f, fieldnames=fieldnames)
         w.writeheader()
         for r in rows:
-            w.writerow({k: r.get(k, "") for k in keys})
+            full = {**prov, **(size or {}), **r}     # row columns win
+            w.writerow({k: full.get(k, "") for k in fieldnames})
     for r in rows:
-        print(f"{bench}," + ",".join(str(r.get(k, "")) for k in keys))
+        merged = {**(size or {}), **r}
+        print(f"{bench}," + ",".join(str(merged.get(k, ""))
+                                     for k in size_keys + keys))
     sys.stdout.flush()
 
 

@@ -12,7 +12,11 @@ shrunk via signature introspection; internal size tables shrunk via
 ``common.smoke``) and *asserts* that each bench completes and emits a
 non-empty, parseable table — the CI guard against bench bit-rot (wired
 into tier-1 as ``tests/test_bench_smoke.py``).  Smoke numbers are
-meaningless and never overwrite the repo-root perf JSON.
+meaningless; they land in ``<name>.smoke.csv`` side paths (and a
+``.smoke.json`` for the perf JSON), so a smoke run can never clobber
+the committed result tables.  Real tables carry provenance columns
+(git_sha / jax_backend / timestamp) plus the effective sizes, stamped
+by ``common.emit``.
 
 The roofline table (§Roofline) is produced by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -55,7 +59,7 @@ SMOKE_MAY_BE_EMPTY = {"roofline"}
 def _smoke_check(name: str) -> str:
     """Assert the bench's persisted table exists and parses; '' if ok."""
     from . import common
-    path = os.path.join(common.RESULTS_DIR, f"{name}.csv")
+    path = os.path.join(common.RESULTS_DIR, f"{name}.smoke.csv")
     if not os.path.exists(path):
         return f"{name}: no table at {path}"
     with open(path, newline="") as f:

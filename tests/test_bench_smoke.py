@@ -5,8 +5,10 @@ asserts each completes and emits a non-empty, parseable table; the
 engine-throughput bench must additionally produce schema-valid perf JSON
 (mode/workers/chunk/tuples_per_sec + git_sha/jax_backend/timestamp).
 Numbers are meaningless in smoke mode — only the plumbing is under test
-— and the repo-root ``BENCH_engine_throughput.json`` trajectory is never
-touched (smoke JSON goes to the scratch results dir).
+— so every smoke table lands on a ``.smoke.csv`` side path (and the
+perf JSON on ``.smoke.json``): a smoke run can never clobber committed
+result tables, and the repo-root ``BENCH_engine_throughput.json``
+trajectory is never touched.
 """
 import json
 import os
@@ -28,10 +30,12 @@ def test_bench_smoke_all_registered(tmp_path):
         cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
     assert "0 failures" in proc.stdout
-    # every registered bench left a table in the scratch dir
+    # every registered bench left a table in the scratch dir, on the
+    # smoke side path (never the real <name>.csv)
     from benchmarks.run import BENCHES
     for name, _, _ in BENCHES:
-        assert (tmp_path / f"{name}.csv").exists(), name
+        assert (tmp_path / f"{name}.smoke.csv").exists(), name
+        assert not (tmp_path / f"{name}.csv").exists(), name
     # perf-JSON contract (side path; repo-root trajectory untouched)
     rows = json.loads((tmp_path
                        / "BENCH_engine_throughput.smoke.json").read_text())
