@@ -25,6 +25,14 @@ Every row's ``speedup_vs_reference`` is computed against a reference
 baseline timed at the *same* stream length (the pallas_jit rows run a
 shorter stream, so they get their own same-``n`` baseline).
 
+The ``chain_*`` rows (PR 4) document multi-edge chain fusion: same-key
+Filter→GroupBy (``fg``) and Filter→Project→GroupBy (``fpg``) pipelines
+under the forced-jit device plane, fused vs ``device_chain=False``, with
+a ``placements_per_supertick`` column measured over the emitting phase —
+the fused rows pay exactly one partition+scatter per super-tick for the
+whole chain (2→1 and 3→1 drops), with sink counts asserted identical
+across every variant and the host-fused numpy baseline.
+
 Acceptance bar for the device-resident plane (PR 3): ``pallas`` >= 100x
 the PR-2 pallas rows (which re-entered the Pallas interpreter per chunk:
 2,650 tuples/s at chunk=64) and within ~2x of ``numpy`` at chunk >= 512.
@@ -61,6 +69,11 @@ def _all_pass(k, v):
     return v >= 0
 
 
+def _scale_val(k, v):
+    """Key-preserving Project map (chain-fusible; stable identity)."""
+    return k, v * 2.0
+
+
 def _stream(n: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     keys = np.minimum(rng.zipf(ZIPF_A, n) - 1, NUM_KEYS - 1).astype(np.int64)
@@ -90,6 +103,53 @@ def _build(n_tuples, num_workers, chunk, *, reference=False, backend=None,
     return eng, sink
 
 
+def _build_chain(n_tuples, num_workers, chunk, *, with_project=True,
+                 backend=None, batch_ticks=BATCH, device_executor=None,
+                 device_chain=None):
+    """Filter -> [Project ->] GroupBy -> Sink over one key space: every
+    edge is routing-equivalent, so the device plane fuses the whole run
+    into one placement + one dispatch per super-tick."""
+    from repro.dataflow.operators import Project
+    keys, vals = _stream(n_tuples)
+    eng = Engine(partition_backend=backend, batch_ticks=batch_ticks,
+                 device_executor=device_executor, device_chain=device_chain)
+    src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
+    prev = src
+    ops = [Filter("filter", num_workers, num_workers * chunk,
+                  predicate=_all_pass)]
+    if with_project:
+        ops.append(Project("project", num_workers, num_workers * chunk,
+                           fn=_scale_val, preserves_keys=True))
+    ops.append(GroupByAgg("groupby", num_workers, chunk))
+    ops.append(Sink("sink", NUM_KEYS, snapshot_every=BATCH))
+    for op in ops:
+        eng.add_op(op)
+        eng.connect(prev, op, NUM_KEYS)
+        prev = op
+    return eng, ops[-1]
+
+
+def _run_chain(n_tuples, num_workers, chunk, *, reps=3, **kw):
+    """Timed chain run + the placements-per-emitting-super-tick metric
+    (measured while sources still emit, so drain-phase windows — which
+    place nothing on any plane — don't dilute the placement-drop
+    provenance the fused rows exist to document)."""
+    best = 0.0
+    for _ in range(reps):
+        eng, sink = _build_chain(n_tuples, num_workers, chunk, **kw)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        best = max(best, n_tuples / max(dt, 1e-9))
+    meter, _ = _build_chain(n_tuples, num_workers, chunk, **kw)
+    while not all(s.finished for s in meter.sources):
+        meter.run_super_tick(meter._fusible_ticks(BATCH))
+    placed = sum(getattr(e.exchange, "placements", 0) for e in meter.edges)
+    per_super = placed / max(meter.super_ticks, 1)
+    meter.run()
+    return best, sink, round(per_super, 2)
+
+
 def _run_one(n_tuples, num_workers, chunk, *, reps=3, **kw):
     """Best-of-``reps`` tuples/sec (this box is noisy; max is the least
     contended run) plus the last run's sink for the correctness check."""
@@ -107,6 +167,10 @@ def _plane_of(mode: str) -> str:
     """Which data plane a mode's rows actually measured — stamped into
     the perf JSON so a 'pallas' row on a CPU box (host twin) is never
     mistaken for the jitted device step when diffing across PRs."""
+    if mode.startswith("chain_") and mode.endswith("_numpy"):
+        return "host-fused"
+    if mode.startswith("chain_"):
+        return "device-jit"
     if mode == "pallas_jit":
         return "device-jit"
     if mode == "pallas":
@@ -118,6 +182,48 @@ def _plane_of(mode: str) -> str:
             return "unavailable"
     return {"reference": "reference", "columnar": "host-columnar",
             "numpy": "host-fused"}.get(mode, mode)
+
+
+def _chain_rows(n: int, num_workers: int = 16, chunk: int = 512):
+    """Fused-chain provenance rows (PR 4): same-key chains under the
+    forced-jit device plane, fused vs per-edge, plus the host-fused
+    baseline.  ``placements_per_supertick`` documents the placement-work
+    drop — the Filter→GroupBy chain pays 2 partition+scatter dispatches
+    per emitting super-tick per-edge and exactly 1 fused (the second
+    edge's placement is eliminated); Filter→Project→GroupBy drops 3→1.
+    Sink counts are asserted identical across every variant."""
+    variants = [
+        # (mode, with_project, engine kwargs)
+        ("chain_fg_numpy", False, dict(backend="numpy")),
+        ("chain_fg_jit", False, dict(backend="pallas",
+                                     device_executor="jit")),
+        ("chain_fg_jit_unfused", False, dict(backend="pallas",
+                                             device_executor="jit",
+                                             device_chain=False)),
+        ("chain_fpg_numpy", True, dict(backend="numpy")),
+        ("chain_fpg_jit", True, dict(backend="pallas",
+                                     device_executor="jit")),
+        ("chain_fpg_jit_unfused", True, dict(backend="pallas",
+                                             device_executor="jit",
+                                             device_chain=False)),
+    ]
+    rows = []
+    oracle = {}
+    for mode, with_project, opts in variants:
+        try:
+            tps, sink, per_super = _run_chain(n, num_workers, chunk,
+                                              with_project=with_project,
+                                              **opts)
+        except ImportError:
+            continue                # container without jax
+        if with_project in oracle:
+            assert np.array_equal(sink.counts, oracle[with_project]), mode
+        else:
+            oracle[with_project] = sink.counts.copy()
+        rows.append(dict(mode=mode, n_tuples=n, workers=num_workers,
+                         chunk=chunk, tuples_per_sec=round(tps),
+                         placements_per_supertick=per_super))
+    return rows
 
 
 def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
@@ -136,8 +242,9 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
             return baselines[n]
 
         base_tps = base(n_tuples)[0]
-        rows.append(dict(mode="reference", workers=num_workers,
-                         chunk=chunk, tuples_per_sec=round(base_tps),
+        rows.append(dict(mode="reference", n_tuples=n_tuples,
+                         workers=num_workers, chunk=chunk,
+                         tuples_per_sec=round(base_tps),
                          speedup_vs_reference=1.0))
         variants = [
             ("columnar", dict(backend="numpy", batch_ticks=1)),
@@ -159,12 +266,15 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
             ref_tps, ref_sink = base(n)   # honest same-n baseline
             assert np.array_equal(sink.counts, ref_sink.counts), mode
             rows.append(dict(
-                mode=mode, workers=num_workers, chunk=chunk,
+                mode=mode, n_tuples=n, workers=num_workers, chunk=chunk,
                 tuples_per_sec=round(tps),
                 speedup_vs_reference=round(tps / ref_tps, 2)))
+    if include_pallas:
+        rows += _chain_rows(common.smoke(40_000, 2_000))
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
-          "speedup_vs_reference"], size=dict(n_tuples=n_tuples), prov=prov)
+          "speedup_vs_reference", "placements_per_supertick"],
+         size=dict(n_tuples=n_tuples), prov=prov)
     # Perf trajectory for future PRs to diff against (provenance-stamped).
     # Smoke mode validates the JSON contract against a side path so the
     # repo-root trajectory is never clobbered by tiny-n runs.
@@ -173,7 +283,9 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
     os.makedirs(os.path.dirname(json_path), exist_ok=True)
     with open(json_path, "w") as f:
         json.dump([dict({k: r[k] for k in
-                         ("mode", "workers", "chunk", "tuples_per_sec")},
+                         ("mode", "n_tuples", "workers", "chunk",
+                          "tuples_per_sec", "placements_per_supertick")
+                         if k in r},
                         plane=_plane_of(r["mode"]), **prov)
                    for r in rows], f, indent=1)
         f.write("\n")

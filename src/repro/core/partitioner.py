@@ -128,6 +128,10 @@ class RoutingTable:
         self._is_split: Optional[np.ndarray] = None
         self._any_split = False
         self._derived_version = -1
+        # Routing-equivalence fingerprint cache (see `routing_token`);
+        # the weights-derived half is invalidated with the rest of the
+        # derived state on every version bump.
+        self._token: Optional[int] = None
         # Optional listener(keys, old_rows, new_rows) fired on any rewrite.
         # Engines use it to synchronize state migration with the partition
         # change (the "markers" strategy of §5.3: both happen at the same
@@ -252,7 +256,47 @@ class RoutingTable:
             self._primary = w.argmax(axis=1).astype(np.int64)
             self._is_split = np.count_nonzero(w > 0, axis=1) > 1
             self._any_split = bool(self._is_split.any())
+            self._token = None
             self._derived_version = self.version
+
+    def routing_token(self):
+        """Cheap equivalence fingerprint of the *pure* routing function.
+
+        Two tables whose tokens compare equal are provably
+        routing-equivalent: they send any record stream to identical
+        destinations, **independently of their per-key counters**, so a
+        downstream edge may reuse an upstream edge's placement (the
+        device plane's multi-edge chain fusion).  That holds exactly when
+        neither table has split keys — a one-hot table's destination is
+        the counter-free gather ``primary[key]`` — so a table with any
+        split key returns ``None`` (never equivalent to anything: its
+        destinations depend on private counter state even against an
+        identically-weighted twin).
+
+        The token is ``(num_keys, num_workers, hash(primary),
+        hash(owner))``.  The instance ``version`` counter is deliberately
+        *not* part of it: versions count mutations per instance and are
+        meaningless across instances (two fresh tables both read 0; two
+        independently-rewritten tables with identical weights may read 3
+        and 7) — content is what proves equivalence, and any version
+        bump that changes routing changes the content hash too.  The
+        weights-derived half is cached via ``_derived_version`` (every
+        mutation invalidates it); ``owner`` is hashed per call because
+        MARKERS migrations rewrite it *without* a version bump (direct
+        element writes — there is no epoch to cache against, and a
+        missed write site would silently fuse non-equivalent edges).
+        The per-call cost is one O(num_keys) hash per chain edge per
+        super-tick, bounded by the device plane's ``MAX_FOLD_CELLS``
+        key-space ceiling and amortized over the super-tick's record
+        volume — correctness over an epoch-counter micro-optimization.
+        """
+        self._refresh_derived()
+        if self._any_split:
+            return None
+        if self._token is None:
+            self._token = hash(self._primary.tobytes())
+        return (self.num_keys, self.num_workers, self._token,
+                hash(self.owner.tobytes()))
 
     @property
     def cdf32(self) -> np.ndarray:
@@ -267,6 +311,7 @@ class RoutingTable:
         self._primary = None
         self._is_split = None
         self._any_split = False
+        self._token = None
         self._derived_version = -1
 
     def sync_counters(self) -> None:

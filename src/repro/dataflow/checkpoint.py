@@ -97,7 +97,13 @@ def snapshot(engine: Engine) -> Dict:
     A checkpoint is one of the device plane's materialization
     boundaries: every device-resident operator first syncs its rings,
     keyed state and counters into the host structures this snapshot
-    copies, so the cut is bit-identical to the host plane's.
+    copies, so the cut is bit-identical to the host plane's.  Fused
+    chains need no special casing here: every stage of a chain owns its
+    own rings/fold/mirrors (the fusion shares *placement work*, not
+    state), so the per-runtime ``sync_host`` below cuts through a chain
+    exactly as it cuts through per-edge runtimes — and a head's
+    version-stale staged backlog is flushed under its stage-time table
+    first (``DeviceOpRuntime._flush_stale_staged``).
     """
     for op in engine.ops:
         if op.device is not None:
@@ -179,9 +185,12 @@ def restore(engine: Engine, snap: Dict) -> None:
     for att, cs in zip(engine.controllers, snap["controllers"]):
         _restore_controller(att.controller, cs)
     # Device-resident operators replay from the restored host truth: the
-    # device copies are dropped and lazily re-uploaded (mid-super-tick
+    # device copies are dropped and eagerly re-uploaded (mid-super-tick
     # failures thus resume from the last boundary, counters and queues
-    # bit-identical to the host plane).
+    # bit-identical to the host plane).  ``on_restore`` also clears each
+    # runtime's chain-tick mark, so a restored fused chain re-forms (or
+    # falls back per-edge, if the restored tables' tokens no longer
+    # match) on the first post-recovery super-tick.
     for op in engine.ops:
         if op.device is not None:
             op.device.on_restore()

@@ -28,6 +28,39 @@ the next stay on the device as padded, validity-masked
 :class:`DeviceChunk` buffers, so consecutive fused edges share one
 residency domain.
 
+Multi-edge chain fusion
+-----------------------
+Consecutive device edges with *routing-equivalent* tables collapse into
+one fused dispatch.  The common exploratory shape — a stateless Filter /
+Project sandwiched between two edges over the same key space — would
+otherwise re-run a partition + scatter on the second edge that is
+provably identical to the first: a record sits on worker *w* of the map
+stage exactly because ``primary_A[key] == w``, and when edge B's table
+routes the same key space through the same primaries
+(``RoutingTable.routing_token()`` equality; tokens exist only for
+one-hot tables, whose destinations are counter-independent), every
+surviving record's destination on edge B *is* the worker it already
+occupies.  So the map step hands its downstream stage a **pre-placed**
+``[W, B]`` block — row *w* belongs to ring *w* — and the downstream
+ingest (:func:`_push_placed`) is a rank-by-row-cumsum ring append: no
+partition, no inverse-CDF, no one-hot rank matrix.  The whole chain
+(map stages plus the final fold / sink / map tail) advances in **one**
+jitted dispatch per super-tick (:func:`_make_step_chain`, trace-cached
+on the tuple of per-stage :class:`StepSpec`\\ s), and per-super-tick
+placement work drops from one-per-edge to one-per-chain.
+
+Fusibility is re-checked every dispatch (`DeviceOpRuntime.
+_chain_for_dispatch`), so the engine **falls back to per-edge placement
+the moment it cannot prove equivalence**: any rewrite that splits or
+moves a key changes (or voids) a table's token — including
+mid-super-tick rewrites, whose listener-triggered sync flushes staged
+chunks under the pre-rewrite constants first — and demotions, END,
+manual ticks with non-scheduler budgets, or an explicit
+``Engine(device_chain=False)`` / ``REPRO_DEVICE_CHAIN=0`` all disable
+fusion while every stage keeps its exact host mirrors.  Chains require
+every non-tail map stage to preserve keys: Filter does by construction;
+Project must declare ``preserves_keys=True``.
+
 Executors
 ---------
 ``jit``   the real device plane as described above.  Default on TPU;
@@ -255,6 +288,70 @@ def _ingest(spec: StepSpec, consts, state, chunk):
     return _fold_stats(spec, state, keys, valid), hist
 
 
+def _push_placed(spec: StepSpec, state, ok, ov, keep, hist):
+    """Ring-scatter a *pre-placed* ``[W, B]`` block: row ``w``'s live
+    lanes append to ring ``w`` in lane (stream) order.  This is the fused
+    chain's ingest — the records were placed by the upstream edge's
+    partition, and routing-token equality proves edge B would place them
+    identically, so within-destination rank degenerates to a per-row
+    cumsum and no partition runs at all."""
+    jnp = _jnp()
+    dt = state["tail"].dtype
+    kin = keep.astype(dt)
+    rank = jnp.cumsum(kin, axis=1) - kin
+    pos = (state["tail"][:, None] + rank) % spec.cap
+    wid = jnp.arange(spec.W, dtype=dt)[:, None]
+    flat = jnp.where(keep, wid * spec.cap + pos,
+                     spec.W * spec.cap).reshape(-1)
+    rk = state["rk"].reshape(-1).at[flat].set(
+        ok.reshape(-1), mode="drop").reshape(spec.W, spec.cap)
+    rv = state["rv"].reshape(-1).at[flat].set(
+        ov.reshape(-1), mode="drop").reshape(spec.W, spec.cap)
+    return dict(state, rk=rk, rv=rv, tail=state["tail"] + hist)
+
+
+def _map_stage(spec: StepSpec, wk, wv, wmask):
+    """Apply a Filter predicate / Project map to a popped ``[W, B]``
+    window; returns (out_keys, out_vals, keep)."""
+    if spec.kind == "filter":
+        keep = wmask & spec.fn(wk, wv).astype(bool)
+        ok, ov = wk, wv
+    else:                                   # project
+        ok, ov = spec.fn(wk, wv)
+        ok = ok.astype(wk.dtype)
+        ov = ov.astype(wv.dtype)
+        keep = wmask
+    return ok, ov, keep
+
+
+def _fold_popped(spec: StepSpec, consts, state, wk, wv, wmask):
+    """Owned/scattered keyed fold of a popped ``[W, B]`` window (the
+    GroupByAgg tail of the fold and chain steps)."""
+    jnp = _jnp()
+    wid = jnp.arange(spec.W, dtype=wk.dtype)[:, None]
+    owned = (consts["owner"][wk] == wid) if spec.may_scatter else wmask
+    m_own = wmask & owned
+    m_scat = wmask & ~owned
+    flat = (wid * spec.K + wk).reshape(-1)
+    wvf = wv.reshape(-1)
+
+    def fold(cnt, sm, pres, m):
+        mf = m.reshape(-1)
+        cnt = cnt.reshape(-1).at[flat].add(
+            mf.astype(cnt.dtype)).reshape(spec.W, spec.K)
+        sm = sm.reshape(-1).at[flat].add(
+            jnp.where(mf, wvf, 0.0)).reshape(spec.W, spec.K)
+        pres = pres.reshape(-1).at[flat].max(mf).reshape(spec.W, spec.K)
+        return cnt, sm, pres
+
+    cnt, sm, pres = fold(state["counts"], state["sums"],
+                         state["present"], m_own)
+    scnt, ssm, spres = fold(state["scat_counts"], state["scat_sums"],
+                            state["scat_present"], m_scat)
+    return dict(state, counts=cnt, sums=sm, present=pres,
+                scat_counts=scnt, scat_sums=ssm, scat_present=spres)
+
+
 def _make_step_fold():
     import jax
 
@@ -266,28 +363,7 @@ def _make_step_fold():
         else:
             hist = jnp.zeros((spec.W,), state["tail"].dtype)
         wk, wv, wmask, take, state = _pop(spec, state, budget)
-        wid = jnp.arange(spec.W, dtype=wk.dtype)[:, None]
-        owned = (consts["owner"][wk] == wid) if spec.may_scatter else wmask
-        m_own = wmask & owned
-        m_scat = wmask & ~owned
-        flat = (wid * spec.K + wk).reshape(-1)
-        wvf = wv.reshape(-1)
-
-        def fold(cnt, sm, pres, m):
-            mf = m.reshape(-1)
-            cnt = cnt.reshape(-1).at[flat].add(
-                mf.astype(cnt.dtype)).reshape(spec.W, spec.K)
-            sm = sm.reshape(-1).at[flat].add(
-                jnp.where(mf, wvf, 0.0)).reshape(spec.W, spec.K)
-            pres = pres.reshape(-1).at[flat].max(mf).reshape(spec.W, spec.K)
-            return cnt, sm, pres
-
-        cnt, sm, pres = fold(state["counts"], state["sums"],
-                             state["present"], m_own)
-        scnt, ssm, spres = fold(state["scat_counts"], state["scat_sums"],
-                                state["scat_present"], m_scat)
-        state = dict(state, counts=cnt, sums=sm, present=pres,
-                     scat_counts=scnt, scat_sums=ssm, scat_present=spres)
+        state = _fold_popped(spec, consts, state, wk, wv, wmask)
         return state, (hist, take)
 
     return step
@@ -304,17 +380,70 @@ def _make_step_map():
         else:
             hist = jnp.zeros((spec.W,), state["tail"].dtype)
         wk, wv, wmask, take, state = _pop(spec, state, budget)
-        if spec.kind == "filter":
-            keep = wmask & spec.fn(wk, wv).astype(bool)
-            ok, ov = wk, wv
-        else:                                   # project
-            ok, ov = spec.fn(wk, wv)
-            ok = ok.astype(wk.dtype)
-            ov = ov.astype(wv.dtype)
-            keep = wmask
+        ok, ov, keep = _map_stage(spec, wk, wv, wmask)
         out = (ok.reshape(-1), ov.reshape(-1), keep.reshape(-1))
         emitted = keep.sum(axis=1, dtype=take.dtype)
         return state, out, (hist, take, emitted)
+
+    return step
+
+
+def _make_step_chain():
+    """One jitted dispatch advancing a whole fused chain: the head's
+    ingest runs the chain's *single* partition + scatter; every later
+    stage receives its predecessor's pre-placed ``[W, B]`` survivors
+    (:func:`_push_placed` — no placement), pops its own budget, and
+    maps / folds.  Per-stage ``(hist, take, emitted)`` metrics feed the
+    same host mirrors the per-edge dispatches keep."""
+    import jax
+
+    @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+    def step(specs, consts_t, states_t, chunk, budgets):
+        jnp = _jnp()
+        states = list(states_t)
+        metrics = []
+        carry = None
+        for i, spec in enumerate(specs):
+            consts = consts_t[i]
+            st = states[i]
+            if i == 0:
+                if chunk is not None:
+                    st, hist = _ingest(spec, consts, st, chunk)
+                else:
+                    hist = jnp.zeros((spec.W,), st["tail"].dtype)
+            else:
+                ok, ov, keep = carry
+                hist = keep.sum(axis=1, dtype=st["count"].dtype)
+                st = _fold_stats(spec, st, ok.reshape(-1), keep.reshape(-1))
+                if spec.kind == "sink":
+                    kf = ok.reshape(-1)
+                    mf = keep.reshape(-1)
+                    states[i] = dict(
+                        st,
+                        counts=st["counts"].at[kf].add(
+                            mf.astype(st["counts"].dtype)),
+                        sums=st["sums"].at[kf].add(
+                            jnp.where(mf, ov.reshape(-1), 0.0)))
+                    metrics.append((hist, None, None))
+                    carry = None
+                    continue
+                st = _push_placed(spec, st, ok, ov, keep, hist)
+            wk, wv, wmask, take, st = _pop(spec, st, budgets[i])
+            if spec.kind in ("filter", "project"):
+                ok, ov, keep = _map_stage(spec, wk, wv, wmask)
+                carry = (ok, ov, keep)
+                metrics.append((hist, take,
+                                keep.sum(axis=1, dtype=take.dtype)))
+            else:                               # fold tail
+                st = _fold_popped(spec, consts, st, wk, wv, wmask)
+                metrics.append((hist, take, None))
+                carry = None
+            states[i] = st
+        out = None
+        if carry is not None:                   # map tail emits downstream
+            ok, ov, keep = carry
+            out = (ok.reshape(-1), ov.reshape(-1), keep.reshape(-1))
+        return tuple(states), out, tuple(metrics)
 
     return step
 
@@ -361,7 +490,8 @@ def _step_for(kind: str):
         _STEP_CACHE[kind] = {"fold": _make_step_fold,
                              "filter": _make_step_map,
                              "project": _make_step_map,
-                             "sink": _make_step_sink}[kind]()
+                             "sink": _make_step_sink,
+                             "chain": _make_step_chain}[kind]()
     return _STEP_CACHE[kind]
 
 
@@ -413,13 +543,33 @@ class DeviceOpRuntime:
         self._pull = self._pull_counters    # stable identity (ownership)
         self._host_fresh = False   # host copies match device state
         self._reload_pending = False   # host mutated: reload pre-dispatch
+        self._consts_split = False  # any_split of the uploaded consts
+        #: placement (partition + scatter) executions, for the bench's
+        #: placements-per-super-tick provenance row; chain fusion makes
+        #: this 0 on every non-head edge of a fused chain.
+        self.placements = 0
+        #: the routing token under which ALL current ring content was
+        #: placed (None = mixed/unknown).  Chain fusion requires it to
+        #: equal the chain's token: token equality of the *current*
+        #: tables proves nothing about backlog placed under an older
+        #: version (e.g. both edges rewritten identically — tokens still
+        #: match, but records queued pre-rewrite sit on the old primary's
+        #: ring and would be mis-delivered by a pre-placed push).
+        self._placed_token = None
+        # ---- chain fusion links (set by Engine._wire_device) ----------- #
+        self.chain_up: Optional["DeviceOpRuntime"] = None
+        self.chain_down: Optional["DeviceOpRuntime"] = None
+        self._chain_serial = -1     # engine super-tick serial last chained
+        self._chain_disabled = False  # a fused dispatch failed: stay apart
 
     # ---- small helpers ------------------------------------------------ #
-    def _spec(self) -> StepSpec:
+    def _spec(self, any_split: Optional[bool] = None) -> StepSpec:
         rt = self.routing
         rt._refresh_derived()
+        if any_split is None:
+            any_split = bool(rt._any_split)
         return StepSpec(kind=self.kind, W=self.W, K=self.K, cap=self.cap,
-                        B=self.B, any_split=bool(rt._any_split),
+                        B=self.B, any_split=bool(any_split),
                         may_scatter=bool(self.op.may_scatter),
                         track_stats=bool(self.op.track_key_stats
                                          and self.op.arrived_by_key
@@ -443,6 +593,7 @@ class DeviceOpRuntime:
         """Fall back to the per-chunk host pallas path (rare: 2-D vals,
         an untraceable user fn, or a second in-edge)."""
         from .exchange import Exchange
+        self._unlink_chain()
         staged, self.staged, self.staged_live = self.staged, [], 0
         if self.kind == "sink":
             # Staged sink chunks were accounted at stage time; the host
@@ -491,6 +642,13 @@ class DeviceOpRuntime:
         self._append(self._upload(keys, vals))
 
     def _append(self, chunk: DeviceChunk) -> None:
+        if not self.staged:
+            # Pin the routing constants of the table version this chunk
+            # was *sent* under.  A rewrite between stage and dispatch
+            # fires the edge listener, whose sync routes the staged
+            # backlog with exactly these constants (the staleness fix:
+            # one chunk must never route with mixed old/new tables).
+            self._refresh_consts()
         self.staged.append(chunk)
         self.staged_live += chunk.n_live
         self._host_fresh = False
@@ -548,6 +706,10 @@ class DeviceOpRuntime:
         op = self.op
         self._reload_pending = False
         self._host_fresh = False
+        # Host-loaded queue content has unknown placement provenance
+        # (restores may install backlog placed under any table history):
+        # chain fusion stays off until these rings drain.
+        self._placed_token = None
         with _x64():
             if self.kind != "sink":
                 rk = np.zeros((self.W, self.cap), np.int64)
@@ -593,14 +755,23 @@ class DeviceOpRuntime:
             self.NB = _pow2(int(keys.shape[0]))
         return self._upload(keys, vals)
 
-    def _ensure_ready(self) -> None:
-        """Grow static shapes (cap/B) and allocate device state."""
+    def _ensure_ready(self, incoming: int = 0) -> None:
+        """Grow static shapes (cap/B) and allocate device state.
+
+        ``incoming`` bounds records that will arrive *inside* the next
+        dispatch without ever being staged — a fused chain delivers the
+        upstream stage's survivors straight into these rings, at most
+        its per-ring pop budget per ring (pre-placed: ring ``w`` only
+        receives from upstream ring ``w``) — so the capacity check must
+        cover them or the in-step scatter would wrap onto live entries.
+        """
         # wireable() guarantees service_rate <= MAX_SERVICE_RATE for
         # ring-backed kinds, so B always covers the engine's budgets.
         budget_cap = self.engine.batch_ticks * self.op.service_rate
         if self.kind != "sink" and budget_cap > self.B:
             self.B = int(budget_cap)
-        need = int(self.lens.max(initial=0)) + self.staged_live
+        need = (int(self.lens.max(initial=0)) + self.staged_live
+                + int(incoming))
         if self.state is None:
             self.cap = max(self.cap, _pow2(2 * max(need, 1)))
             self._alloc_state()
@@ -640,6 +811,7 @@ class DeviceOpRuntime:
                     is_split=jnp.asarray(rt._is_split),
                     owner=jnp.asarray(rt.owner.copy()))
             self._consts_version = rt.version
+            self._consts_split = bool(rt._any_split)
 
     def _pull_counters(self) -> np.ndarray:
         return np.asarray(self.state["count"])
@@ -654,26 +826,56 @@ class DeviceOpRuntime:
             rt._count_owner = self._pull
 
     # ---- the fused super-tick dispatch -------------------------------- #
-    def tick(self, budget: int) -> List:
-        if self.state is None and not self.staged:
-            return []                  # nothing ever arrived
+    def _prep(self, budget: int, incoming: int = 0) -> None:
+        """Pre-dispatch lifecycle shared by the per-edge and chain paths:
+        widen the pop window, allocate/grow device state, apply deferred
+        host reloads, claim counters, flush version-stale staged chunks
+        under their pinned constants, then refresh to the live table."""
         if self.kind != "sink" and int(budget) > self.B:
             # A caller outpaced the batch_ticks sizing (manual
             # run_super_tick with a wider window): widen the static pop
             # window so no popped lane can fall outside it (retrace).
             self.B = int(budget)
-        self._ensure_ready()
+        self._ensure_ready(incoming)
         if self._reload_pending:
             self._reload_pending = False
             self._load_host_state()
-        self._refresh_consts()
         if self.kind != "sink":
             self._claim_counters()
-        chunks, self.staged, self.staged_live = self.staged, [], 0
-        step = _step_for(self.kind)
+        self._flush_stale_staged()
+        self._refresh_consts()
+
+    def _flush_stale_staged(self) -> None:
+        """Bugfix: staged chunks must route under the table they were
+        *sent* under.  The rewrite listener fires after the weights
+        moved, so the listener-triggered boundary sync used to dispatch
+        staged chunks with the freshly-bumped table while the host plane
+        had already routed them at send time with the old one — one
+        chunk routed with mixed old/new tables.  The constants pinned at
+        stage time (:meth:`_append`) are still on the device: ingest
+        with them (budget 0), then the caller refreshes to the live
+        table."""
+        if (not self.staged or self.consts is None
+                or self._consts_version == self.routing.version):
+            return
+        chunks = list(self.staged)
+        self._dispatch(_step_for(self.kind),
+                       self._spec(any_split=self._consts_split), chunks, 0)
+        self.staged, self.staged_live = [], 0
+
+    def tick(self, budget: int) -> List:
+        if self.state is None and not self.staged:
+            return []                  # nothing ever arrived
+        chain = self._chain_for_dispatch(budget)
+        if chain is not None:
+            return self._dispatch_chain(chain, budget)
         self._host_fresh = False
+        chunks: List[DeviceChunk] = []
         try:
-            return self._dispatch(step, chunks, budget)
+            self._prep(budget)
+            chunks, self.staged, self.staged_live = self.staged, [], 0
+            return self._dispatch(_step_for(self.kind), self._spec(),
+                                  chunks, budget)
         except Exception as exc:
             if self._dispatched:
                 raise
@@ -687,10 +889,187 @@ class DeviceOpRuntime:
                 f"device plane: first dispatch for {self.op.name!r} "
                 f"failed ({type(exc).__name__}: {exc}); demoting the "
                 f"edge to the host path", RuntimeWarning, stacklevel=2)
-            self.staged = chunks
-            self.staged_live = sum(c.n_live for c in chunks)
+            self.staged = chunks + self.staged
+            self.staged_live = sum(c.n_live for c in self.staged)
             self.demote("untraceable fn")
             return self.op.tick(budget)
+
+    # ---- chain fusion (multi-edge shared placement) -------------------- #
+    def _preserves_keys(self) -> bool:
+        """May this map stage's output reuse its input placement?  A
+        Filter only masks, so always; a Project must declare
+        ``preserves_keys=True`` (an arbitrary fn may re-key, which would
+        invalidate the shared placement)."""
+        if self.kind == "filter":
+            return True
+        return bool(getattr(self.op, "preserves_keys", False))
+
+    def _unlink_chain(self) -> None:
+        if self.chain_up is not None:
+            self.chain_up.chain_down = None
+            self.chain_up = None
+        if self.chain_down is not None:
+            self.chain_down.chain_up = None
+            self.chain_down = None
+
+    def _placement_current(self, tok) -> bool:
+        """Was every record this stage would hand downstream placed under
+        the chain's token?  Ring backlog carries its placement epoch
+        (:attr:`_placed_token`); empty rings are vacuously current, and
+        staged chunks count only if they will be placed under the live
+        table (a version-stale backlog flushes under the old one)."""
+        if self.staged and self._consts_version != self.routing.version:
+            return False
+        return (self._placed_token == tok
+                or int(self.lens.sum()) == 0)
+
+    def _chain_for_dispatch(self, budget: int):
+        """The fused chain ``[self, ...]`` to advance in one dispatch, or
+        ``None`` to stay per-edge.  Re-checked every dispatch, so fusion
+        falls apart the moment equivalence stops being provable: routing
+        tokens must compare equal along the chain (one-hot tables only —
+        any rewrite that splits or moves a key voids or changes them),
+        every member must still be device-wired and unfinished, every
+        non-tail stage key-preserving, and the budget must be the
+        scheduler's ``k * service_rate`` so follower budgets are known
+        (manual odd-budget ticks stay per-edge)."""
+        eng = self.engine
+        if (self.kind not in ("filter", "project")
+                or self.chain_down is None or self._chain_disabled
+                or not getattr(eng, "device_chain", True)
+                or self.op.device is not self or self.op.finished
+                or not self._preserves_keys()
+                or budget != eng._super_k * self.op.service_rate):
+            return None
+        tok = self.routing.routing_token()
+        if tok is None:
+            return None
+        members = [self]
+        r = self
+        while True:
+            d = r.chain_down
+            if (d is None or d.op.device is not d or d.op.finished
+                    or d.routing.routing_token() != tok):
+                break
+            if d.kind == "sink" and d.use_kernel:
+                # The per-edge sink step folds through the Pallas
+                # partition_scatter_fold kernel; the chain tail would
+                # silently swap in the plain scatter-add (different f32
+                # accumulation) — keep use_kernel sinks per-edge so the
+                # A/B contract of device_use_kernel is unchanged.
+                break
+            members.append(d)
+            if (d.kind not in ("filter", "project") or d._chain_disabled
+                    or not d._preserves_keys()):
+                break                   # d is the chain's tail
+            r = d
+        if len(members) < 2:
+            return None
+        # Token equality of the *current* tables is not enough: every
+        # record a non-tail stage will hand downstream must also have
+        # been *placed* under that same token — backlog queued before a
+        # rewrite that moved both tables in lockstep still sits on the
+        # old primaries' rings and would be mis-delivered.
+        if not all(m._placement_current(tok) for m in members[:-1]):
+            return None
+        return members
+
+    def _dispatch_chain(self, members: List["DeviceOpRuntime"],
+                        budget: int) -> List:
+        """Advance the whole fused chain in one jitted dispatch (the
+        head's tick slot; the engine skips the followers' own ticks this
+        super-tick via ``_chain_serial``).  Per-stage metrics update the
+        same exact host mirrors the per-edge dispatches keep."""
+        eng = self.engine
+        budgets = [eng._super_k * r.op.service_rate for r in members]
+        budgets[0] = int(budget)
+        for r in members[1:]:
+            if r.staged:                # leftovers from an unfused window
+                r.tick(0)               # budget 0 never chains: per-edge
+        chunks: List[DeviceChunk] = []
+        ingested = False
+        tok = self.routing.routing_token()
+        try:
+            empty_before = []
+            for i, (r, b) in enumerate(zip(members, budgets)):
+                r._host_fresh = False
+                empty_before.append(int(r.lens.sum()) == 0)
+                # Followers receive up to the upstream stage's per-ring
+                # budget inside the dispatch itself (never staged).
+                r._prep(b, incoming=budgets[i - 1] if i else 0)
+            spec0 = self._spec()
+            chunks, self.staged, self.staged_live = self.staged, [], 0
+            dc = None
+            if len(chunks) == 1:
+                ch = chunks[0]
+                dc = (ch.keys, ch.vals, ch.valid)
+            elif chunks:
+                # Rare multi-chunk stage (END flushes): ingest per-edge
+                # first (budget 0 pops nothing), then chain pop-only —
+                # bit-identical to the per-edge [(c,0)...(c,B)] sequence.
+                self._dispatch(_step_for(self.kind), spec0, chunks, 0)
+                ingested = True
+            specs = (spec0,) + tuple(r._spec() for r in members[1:])
+            consts_t = tuple(r.consts for r in members)
+            states_t = tuple(r.state for r in members)
+            step = _step_for("chain")
+            with _x64():
+                states_t, out, metrics = step(
+                    specs, consts_t, states_t, dc,
+                    tuple(np.int64(b) for b in budgets))
+        except Exception as exc:
+            if all(r._dispatched for r in members):
+                raise
+            # First fused dispatch failed (typically an untraceable user
+            # fn in some stage): permanently un-fuse this head and replay
+            # per-edge — the per-edge first-dispatch fallback demotes the
+            # offending stage on its own tick, mirrors intact.
+            import warnings
+            warnings.warn(
+                f"device plane: fused chain dispatch at {self.op.name!r} "
+                f"failed ({type(exc).__name__}: {exc}); falling back to "
+                f"per-edge dispatch", RuntimeWarning, stacklevel=2)
+            if not ingested:
+                self.staged = chunks + self.staged
+                self.staged_live = sum(c.n_live for c in self.staged)
+            self._chain_disabled = True
+            return self.tick(budget)
+        for r, st in zip(members, states_t):
+            r.state = st
+            r._dispatched = True
+        for r, was_empty in zip(members, empty_before):
+            # Everything delivered inside this dispatch was placed under
+            # the chain's token (fusibility already proved any surviving
+            # backlog shares it).
+            if was_empty or r._placed_token == tok:
+                r._placed_token = tok
+            else:
+                r._placed_token = None
+        for r, (hist, take, emitted) in zip(members, metrics):
+            hist = np.asarray(hist)
+            r.edge.exchange.account(hist)
+            r.received += hist
+            if take is None:            # sink tail: no rings, direct fold
+                r.op.workers[0].stats.processed_total += int(hist.sum())
+            else:
+                take = np.asarray(take)
+                r.lens += hist - take
+                for w, worker in enumerate(r.op.workers):
+                    worker.stats.processed_total += int(take[w])
+            if emitted is not None:
+                em = np.asarray(emitted)
+                for w, worker in enumerate(r.op.workers):
+                    worker.stats.emitted_total += int(em[w])
+        for r in members[1:]:
+            r._chain_serial = eng._super_serial
+        if dc is not None:
+            self.placements += 1        # the chain's single placement
+        if out is not None:             # map tail: emit downstream
+            n_live = int(np.asarray(metrics[-1][2]).sum())
+            tail = members[-1]
+            if n_live and tail.op.out_edge is not None:
+                tail.op.out_edge.send(DeviceChunk(*out, n_live))
+        return []
 
     def flush_staged(self) -> None:
         """Route staged chunks into the rings without popping (budget 0).
@@ -705,13 +1084,28 @@ class DeviceOpRuntime:
         if self.staged and self.kind != "sink" and self.op.device is self:
             self.tick(0)
 
-    def _dispatch(self, step, chunks, budget) -> List:
+    def _dispatch(self, step, spec: StepSpec, chunks, budget) -> List:
+        if chunks and self.kind != "sink":
+            # Placement-epoch tracking: the ingested chunks are placed
+            # under the *current* table iff the uploaded consts are
+            # current (a version-stale flush places under the old,
+            # now-unrecoverable table: None).  Content layered over
+            # differently-placed backlog poisons the epoch until the
+            # rings drain.
+            tok = (self.routing.routing_token()
+                   if self._consts_version == self.routing.version
+                   else None)
+            if int(self.lens.sum()) == 0:
+                self._placed_token = tok
+            elif self._placed_token != tok:
+                self._placed_token = None
         with _x64():
             if self.kind == "sink":
-                for ch in chunks:      # accounted at stage time
-                    self.state, _ = step(self._spec(), self.consts,
-                                         self.state,
+                for ch in chunks:      # received accounted at stage time
+                    self.state, _ = step(spec, self.consts, self.state,
                                          (ch.keys, ch.vals, ch.valid))
+                    # The host-plane pop happens in this same tick slot.
+                    self.op.workers[0].stats.processed_total += ch.n_live
                 self._dispatched = True
                 return []
             seq = ([(c, 0) for c in chunks[:-1]]
@@ -720,8 +1114,10 @@ class DeviceOpRuntime:
             for ch, b in seq:
                 dc = (None if ch is None
                       else (ch.keys, ch.vals, ch.valid))
-                res = step(self._spec(), self.consts, self.state, dc,
+                res = step(spec, self.consts, self.state, dc,
                            np.int64(b))
+                if ch is not None:
+                    self.placements += 1
                 if self.kind == "fold":
                     self.state, (hist, take) = res
                     emitted = None
@@ -847,6 +1243,7 @@ class DeviceOpRuntime:
         self.state = None
         self.consts = None
         self._consts_version = -1
+        self._chain_serial = -1        # never "already ticked" post-restore
         self.staged, self.staged_live = [], 0
         for w, worker in enumerate(self.op.workers):
             self.lens[w] = len(worker.queue)

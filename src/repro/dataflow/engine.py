@@ -280,7 +280,8 @@ class Engine:
     def __init__(self, *, partition_backend: BackendSpec = None,
                  reference: bool = False, batch_ticks: int = 1,
                  device_executor: Optional[str] = None,
-                 device_use_kernel: bool = False):
+                 device_use_kernel: bool = False,
+                 device_chain: Optional[bool] = None):
         self.partition_backend = partition_backend
         self.reference = bool(reference)
         self.batch_ticks = max(1, int(batch_ticks))
@@ -290,6 +291,16 @@ class Engine:
         #: when ``partition_backend`` selects the pallas plane.
         self.device_executor = device_executor
         self.device_use_kernel = bool(device_use_kernel)
+        #: multi-edge chain fusion on the device plane: consecutive jit
+        #: edges whose RoutingTables are provably routing-equivalent
+        #: (``RoutingTable.routing_token``) share one placement and run
+        #: as one fused dispatch per super-tick.  Default on; disable
+        #: with ``device_chain=False`` or ``REPRO_DEVICE_CHAIN=0`` (the
+        #: per-edge A/B baseline the bench rows compare against).
+        if device_chain is None:
+            import os
+            device_chain = os.environ.get("REPRO_DEVICE_CHAIN", "1") != "0"
+        self.device_chain = bool(device_chain)
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []
@@ -299,6 +310,15 @@ class Engine:
         self.tick = 0
         self.state_units_moved = 0.0
         self.ticks_to_finish: Optional[int] = None
+        #: scheduler bookkeeping for the device plane's chain fusion:
+        #: `_super_serial` names the current super-tick (a chain head
+        #: marks the followers it advanced so their own ticks are
+        #: skipped), `_super_k` is its width (follower budgets are
+        #: ``k * service_rate``), `super_ticks` counts windows (the
+        #: bench's placements-per-super-tick denominator).
+        self._super_serial = 0
+        self._super_k = 1
+        self.super_ticks = 0
 
     # ---- graph construction ------------------------------------------- #
     def add_source(self, src: Source) -> Source:
@@ -318,10 +338,11 @@ class Engine:
         producer.out_edge = edge
         self.edges.append(edge)
         self.upstreams.setdefault(consumer.name, []).append(producer)
-        self._wire_device(edge, consumer)
+        self._wire_device(edge, consumer, producer)
         return edge
 
-    def _wire_device(self, edge: Edge, consumer: Operator) -> None:
+    def _wire_device(self, edge: Edge, consumer: Operator,
+                     producer=None) -> None:
         """Promote an eligible pallas edge into the device-resident plane.
 
         Eligible: the edge resolved to the pallas backend and the
@@ -331,6 +352,16 @@ class Engine:
         jitted step); "host" (the off-TPU default) swaps in the fused
         numpy exchange — the bit-identical host twin.  Ineligible edges
         keep the per-chunk pallas backend.
+
+        Consecutive jit edges are additionally *chain-linked* when the
+        producer is itself a device-resident map stage (Filter /
+        Project): if at dispatch time both edges' routing tables are
+        provably routing-equivalent (``RoutingTable.routing_token``),
+        the chain head advances the whole chain in one fused dispatch,
+        reusing the upstream placement instead of re-partitioning (see
+        :mod:`repro.dataflow.device`).  The link is structural only —
+        per-dispatch token checks decide fused vs per-edge, so rewrites
+        and demotions fall back automatically.
         """
         from .exchange import PallasPartitionBackend
         if self.reference or not isinstance(
@@ -351,6 +382,12 @@ class Engine:
             consumer.device = runtime
             edge.exchange = DeviceExchange(edge.routing, consumer, runtime)
             edge.device_plane = "jit"
+            up = getattr(producer, "device", None)
+            if (isinstance(up, dev.DeviceOpRuntime)
+                    and up.kind in ("filter", "project")
+                    and producer.device is up):
+                up.chain_down = runtime
+                runtime.chain_up = up
         else:
             edge.exchange = Exchange(edge.routing, consumer, "numpy")
             edge.device_plane = "host-twin"
@@ -412,6 +449,12 @@ class Engine:
         interior tick carries a control or snapshot event.
         """
         t0 = self.tick
+        # Name the window for the device plane's chain fusion: a chain
+        # head advances its followers inside its own dispatch and marks
+        # them with this serial so their ticks below are skipped.
+        self._super_serial += 1
+        self._super_k = k
+        self.super_ticks += 1
         # 1. sources emit (one contiguous chunk == k per-tick emissions)
         for src in self.sources:
             if not src.finished:
@@ -425,6 +468,9 @@ class Engine:
         for op in self.ops:
             if op.finished:
                 continue
+            if (op.device is not None
+                    and op.device._chain_serial == self._super_serial):
+                continue            # advanced by its chain head's dispatch
             outs = op.tick(k * op.service_rate)
             if outs and op.out_edge is not None:
                 op.out_edge.send(outs[0] if len(outs) == 1 else concat(outs))
@@ -469,7 +515,10 @@ class Engine:
         t0 = self.tick
         nxt = t0 + horizon - 1          # latest admissible window end
         if self.sink is not None:
-            every = int(self.sink.snapshot_every)
+            # snapshot_every may be 0 or None ("periodic snapshots off",
+            # only the END snapshot): no result boundary bounds fusion.
+            # int() the truthy case only — int(None) raises.
+            every = int(self.sink.snapshot_every or 0)
             if every > 0:
                 nxt = min(nxt, t0 + (-t0) % every)
         for att in self.controllers:

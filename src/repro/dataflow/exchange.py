@@ -54,7 +54,15 @@ Backends
             control metrics per dispatch and materializes state at the
             boundaries ``Engine._fusible_ticks`` already computes (sink
             snapshots, controller metric rounds, checkpoints, END,
-            rewrites).  On TPU the partition core is the fused Pallas
+            rewrites).  Consecutive jit edges whose RoutingTables are
+            provably routing-equivalent (``RoutingTable.routing_token``:
+            one-hot tables over the same key space with identical
+            primaries/owners) additionally fuse into a *chain*: the
+            whole Filter/Project → … → GroupBy/Sink run advances in one
+            dispatch per super-tick sharing the head edge's placement,
+            falling back per-edge the moment a rewrite voids the token
+            (``Engine(device_chain=False)`` / ``REPRO_DEVICE_CHAIN=0``
+            disables).  On TPU the partition core is the fused Pallas
             :func:`repro.kernels.partition.partition_scatter` /
             ``partition_scatter_fold`` kernel; off TPU the plane runs
             its validation twin (``Engine(device_executor=...)`` /
@@ -322,6 +330,10 @@ class Exchange:
         self.backend = get_backend(backend)
         self.tuples_sent = 0
         self.sent_per_worker = np.zeros(routing.num_workers, dtype=np.int64)
+        #: partition+scatter placements computed on this edge (one per
+        #: chunk here; the device plane's chain fusion drives the same
+        #: counter to 0 on every fused non-head edge).
+        self.placements = 0
 
     def send(self, chunk: Chunk) -> None:
         keys, vals = chunk
@@ -329,6 +341,7 @@ class Exchange:
         if n == 0:
             return
         plan = self.backend.partition_scatter(self.routing, keys)
+        self.placements += 1
         self.tuples_sent += n
         self.sent_per_worker += plan.hist
         receive = getattr(self.dst, "receive_scatter", None)
@@ -363,6 +376,13 @@ class DeviceExchange:
         self.runtime = runtime
         self.tuples_sent = 0
         self.sent_per_worker = np.zeros(routing.num_workers, dtype=np.int64)
+
+    @property
+    def placements(self):
+        """Placement executions on this edge: the runtime counts one per
+        ingested chunk; a fused chain's non-head edges stay at 0 (they
+        reuse the head edge's placement — the whole point)."""
+        return self.runtime.placements
 
     def account(self, hist: np.ndarray) -> None:
         self.tuples_sent += int(hist.sum())

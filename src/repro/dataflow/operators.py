@@ -317,14 +317,24 @@ class Filter(Operator):
 
 
 class Project(Operator):
-    """Applies (keys, vals) -> (keys', vals') elementwise."""
+    """Applies (keys, vals) -> (keys', vals') elementwise.
+
+    ``preserves_keys=True`` declares that ``fn`` never changes a
+    record's key (it only transforms vals) — the contract that lets the
+    device plane fuse this stage into a multi-edge chain and reuse the
+    upstream edge's placement (:mod:`repro.dataflow.device`).  A
+    re-keying ``fn`` must leave it False (the default): a chained stage
+    would otherwise scatter records by their *old* key's placement.
+    """
 
     traits = OperatorTraits("project", StateMutability.IMMUTABLE)
 
     def __init__(self, name, num_workers, service_rate,
-                 fn: Callable[[np.ndarray, np.ndarray], Chunk]):
+                 fn: Callable[[np.ndarray, np.ndarray], Chunk],
+                 preserves_keys: bool = False):
         super().__init__(name, num_workers, service_rate)
         self.fn = fn
+        self.preserves_keys = bool(preserves_keys)
 
     def process(self, worker, keys, vals):
         return self.fn(keys, vals)
@@ -598,7 +608,10 @@ class Sink(Operator):
 
     def snapshot(self, tick: int) -> None:
         self._tick = tick
-        if tick % self.snapshot_every == 0:
+        # snapshot_every of 0 or None disables the periodic series (the
+        # END snapshot in `on_end` still fires); the modulo would raise
+        # on either degenerate value.
+        if self.snapshot_every and tick % self.snapshot_every == 0:
             if self.device is not None:
                 # The boundary readback: the result columns leave the
                 # device only on the snapshot grid.

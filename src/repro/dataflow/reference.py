@@ -42,6 +42,7 @@ class ReferenceExchange(Exchange):
         if keys.size == 0:
             return
         dest = self.routing.route_chunk(keys)
+        self.placements += 1
         self.tuples_sent += int(keys.size)
         self.sent_per_worker += np.bincount(dest, minlength=self.sent_per_worker.size)
         for w in range(self.dst.num_workers):

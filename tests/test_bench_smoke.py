@@ -44,6 +44,18 @@ def test_bench_smoke_all_registered(tmp_path):
          "jax_backend", "timestamp"} <= set(r) for r in rows)
     assert {"reference", "columnar", "numpy", "pallas"} <= {
         r["mode"] for r in rows}
+    # fused-chain rows: the placement-drop provenance must be present —
+    # the fused variants pay exactly 1 placement per emitting super-tick,
+    # the per-edge variants one per edge (2 for F→G, 3 for F→P→G)
+    chain = {r["mode"]: r for r in rows if r["mode"].startswith("chain_")}
+    assert {"chain_fg_jit", "chain_fg_jit_unfused",
+            "chain_fpg_jit", "chain_fpg_jit_unfused"} <= set(chain)
+    assert chain["chain_fg_jit"]["placements_per_supertick"] < \
+        chain["chain_fg_jit_unfused"]["placements_per_supertick"]
+    assert chain["chain_fpg_jit"]["placements_per_supertick"] < \
+        chain["chain_fpg_jit_unfused"]["placements_per_supertick"]
+    assert all(r["plane"] == "device-jit" for m, r in chain.items()
+               if not m.endswith("_numpy"))
     after = os.path.getmtime(os.path.join(REPO,
                                           "BENCH_engine_throughput.json"))
     assert before == after

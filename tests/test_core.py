@@ -132,6 +132,49 @@ class TestRoutingTable:
         rt.split_key(1, [1, 2], [0.25, 0.75])
         np.testing.assert_allclose(rt.weights[1], [0, 0.25, 0.75])
 
+    def test_routing_token_equivalence(self):
+        """Tokens compare equal exactly for routing-equivalent one-hot
+        tables (the device plane's chain-fusion precondition)."""
+        a, b = RoutingTable(10, 4), RoutingTable(10, 4)
+        assert a.routing_token() == b.routing_token()
+        assert a.routing_token() != RoutingTable(10, 5).routing_token()
+        assert a.routing_token() != RoutingTable(12, 4).routing_token()
+        # same-shape but different primaries: not equivalent
+        c = RoutingTable(10, 4)
+        c.move_key(0, 3)
+        assert a.routing_token() != c.routing_token()
+        # identical rewrites converge again (content, not version, is
+        # what proves equivalence — versions differ per instance)
+        a2 = RoutingTable(10, 4)
+        a2.move_key(0, 3)
+        a2.move_key(0, 0)           # back to hash placement, version 2
+        assert a2.version != a.version
+        assert a2.routing_token() == a.routing_token()
+
+    def test_routing_token_invalidated_by_every_mutation(self):
+        rt = RoutingTable(8, 4)
+        tok = rt.routing_token()
+        rt.move_key(1, 2)
+        assert rt.routing_token() != tok            # version bump -> new token
+        # split keys are counter-dependent: no token at all
+        rt2 = RoutingTable(8, 4)
+        rt2.split_key(0, [0, 1], [0.5, 0.5])
+        assert rt2.routing_token() is None
+        # owner rewrites (MARKERS migrations) change no version but must
+        # still change the token
+        rt3 = RoutingTable(8, 4)
+        tok3 = rt3.routing_token()
+        rt3.owner[0] = 3
+        assert rt3.routing_token() != tok3
+        # restore paths that write weights directly invalidate via
+        # invalidate_cache
+        rt4 = RoutingTable(8, 4)
+        tok4 = rt4.routing_token()
+        rt4.weights[0] = 0.0
+        rt4.weights[0, 2] = 1.0
+        rt4.invalidate_cache()
+        assert rt4.routing_token() != tok4
+
     def test_rows_always_stochastic_after_any_mutation(self):
         rt = RoutingTable(8, 4)
         rt.redirect_worker(0, 1)

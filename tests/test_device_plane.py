@@ -209,6 +209,278 @@ class TestJitPlaneEquivalence:
         _assert_runs_identical(a, b)
 
 
+def _proj_keep(k, v):
+    return k, v + 1.0
+
+
+def _rekey(k, v):
+    return (k + 1) % 24, v
+
+
+_UNSET = object()
+
+
+def _chain_pipeline(backend=None, *, n=5000, num_keys=24, num_workers=4,
+                    chunk=8, batch_ticks=4, project=_proj_keep,
+                    preserves_keys=True, controller=False, hot_frac=0.0,
+                    seed=0, snapshot_every=_UNSET, **engine_kw):
+    """Filter -> Project -> GroupBy -> Sink over one key space: the
+    canonical fusible chain (three routing-equivalent edges)."""
+    keys, vals = _zipf_stream(n, num_keys, seed, hot_frac)
+    eng = Engine(partition_backend=backend, batch_ticks=batch_ticks,
+                 **engine_kw)
+    src = eng.add_source(Source("src", keys, vals, num_workers * chunk))
+    filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
+                             predicate=_all_pass))
+    proj = eng.add_op(Project("proj", num_workers, num_workers * chunk,
+                              fn=project, preserves_keys=preserves_keys))
+    grp = eng.add_op(GroupByAgg("groupby", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", num_keys,
+                           snapshot_every=batch_ticks
+                           if snapshot_every is _UNSET else snapshot_every))
+    prev = src
+    for op in (filt, proj, grp, sink):
+        eng.connect(prev, op, num_keys)
+        prev = op
+    ctrl = None
+    if controller:
+        ctrl = eng.attach_controller(grp, ReshapeConfig(metric_period=4))
+    return eng, sink, grp, ctrl
+
+
+def _mirrors_equal(a_eng, b_eng):
+    for oa, ob in zip(a_eng.ops, b_eng.ops):
+        np.testing.assert_array_equal(oa.received_totals(),
+                                      ob.received_totals())
+        for wa, wb in zip(oa.workers, ob.workers):
+            assert wa.stats.processed_total == wb.stats.processed_total
+            assert wa.stats.emitted_total == wb.stats.emitted_total
+
+
+class TestChainFusion:
+    """Multi-edge fusion: routing-equivalent consecutive device edges
+    share one placement and advance as one fused dispatch; fusion falls
+    back per-edge the moment equivalence stops being provable."""
+
+    def test_chain_bit_identical_and_placements_drop(self):
+        """Filter -> Project -> GroupBy over one key space: 3 placements
+        per super-tick collapse to 1 (head edge only), run bit-identical
+        to numpy."""
+        a = _chain_pipeline("numpy")
+        a[0].run()
+        b = _chain_pipeline("pallas", device_executor="jit")
+        b[0].run()
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+        head, mid, tail = b[0].edges[0], b[0].edges[1], b[0].edges[2]
+        assert head.exchange.placements > 0
+        assert mid.exchange.placements == 0      # placement reused
+        assert tail.exchange.placements == 0
+        # host plane paid one placement per edge per super-chunk
+        assert a[0].edges[1].exchange.placements > 0
+        assert a[0].edges[2].exchange.placements > 0
+
+    def test_filter_groupby_chain_placements_2_to_1(self):
+        """The acceptance shape: Filter -> GroupBy same-key chain pays
+        2 placement dispatches per emitting super-tick unfused (one per
+        edge) and exactly 1 fused (the head edge; the second edge's
+        partition+scatter is eliminated)."""
+        fused = _pipeline("pallas", device_executor="jit")
+        fused[0].run()
+        apart = _pipeline("pallas", device_executor="jit",
+                          device_chain=False)
+        apart[0].run()
+        _assert_runs_identical(fused, apart, sync=True)
+        f_head = fused[0].edges[0].exchange.placements
+        assert f_head > 0
+        assert fused[0].edges[1].exchange.placements == 0   # eliminated
+        assert apart[0].edges[0].exchange.placements == f_head
+        # unfused, the second edge re-partitions every emitted chunk
+        assert apart[0].edges[1].exchange.placements == pytest.approx(
+            f_head, rel=0.1)
+
+    def test_unfused_flag_is_bit_identical(self):
+        a = _chain_pipeline("pallas", device_executor="jit",
+                            device_chain=False)
+        a[0].run()
+        assert all(e.exchange.placements > 0 for e in a[0].edges[:3])
+        b = _chain_pipeline("pallas", device_executor="jit")
+        b[0].run()
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+
+    def test_rekeying_project_never_chains(self):
+        """A Project without preserves_keys must not reuse the upstream
+        placement (its output keys re-route) — and stays correct."""
+        a = _chain_pipeline("numpy", project=_rekey, preserves_keys=False)
+        a[0].run()
+        b = _chain_pipeline("pallas", device_executor="jit",
+                            project=_rekey, preserves_keys=False)
+        b[0].run()
+        _assert_runs_identical(a, b)
+        # proj -> groupby edge re-partitions (proj's output is re-keyed)
+        assert b[0].edges[2].exchange.placements > 0
+
+    def test_sink_tail_chain(self):
+        """A W=1 Filter -> Sink pair is routing-equivalent too: the sink
+        tail folds the pre-placed survivors directly (no rings), with
+        received/processed mirrors exact."""
+        def build(backend, **kw):
+            keys, vals = _zipf_stream(3000, 16, seed=7)
+            eng = Engine(partition_backend=backend, batch_ticks=4, **kw)
+            src = eng.add_source(Source("s", keys, vals, 32))
+            filt = eng.add_op(Filter("f", 1, 32, predicate=_half_pass))
+            sink = eng.add_op(Sink("k", 16, snapshot_every=4))
+            eng.connect(src, filt, 16)
+            eng.connect(filt, sink, 16)
+            eng.run()
+            return eng, sink
+
+        a = build("numpy")
+        b = build("pallas", device_executor="jit")
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+        assert b[0].edges[1].exchange.placements == 0
+
+    def test_controller_rewrite_breaks_chain_mid_run(self):
+        """A Reshape mitigation splits/moves keys on the groupby edge:
+        its routing token changes (or voids), the chain falls back to
+        per-edge placement mid-run, and everything stays bit-identical —
+        series, counters, event stream, keyed state."""
+        kw = dict(num_workers=6, controller=True, hot_frac=0.5, seed=1,
+                  n=8000)
+        a = _pipeline("numpy", **kw)
+        a[0].run()
+        b = _pipeline("pallas", device_executor="jit", **kw)
+        b[0].run()
+        _assert_runs_identical(a, b)
+        assert [e.kind for e in a[3].events] == [e.kind for e in b[3].events]
+        assert any(e.kind == "phase2" for e in b[3].events)
+        # fusion engaged for part of the run (fewer placements than the
+        # per-edge host plane), then broke: the groupby edge still paid
+        # placements while its table was split
+        grp_edge = b[0].edges[1]
+        assert 0 < grp_edge.exchange.placements \
+            < a[0].edges[1].exchange.placements
+
+    def test_mid_chain_demotion_preserves_mirrors(self):
+        """Satellite: demoting the *middle* operator of a fused chain
+        (untraceable Project fn on the first dispatch) must fall back
+        per-edge with received/processed/emitted mirrors exact and no
+        double-counted staged records."""
+        def impure(k, v):
+            return k, np.asarray(v) * 2.0      # concretizes a tracer
+
+        a = _chain_pipeline("numpy", project=impure)
+        a[0].run()
+        with pytest.warns(RuntimeWarning):
+            b = _chain_pipeline("pallas", device_executor="jit",
+                                project=impure)
+            b[0].run()
+        assert b[0].ops[1].device is None                  # proj demoted
+        assert b[0].edges[1].device_plane.startswith("demoted")
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+
+    def test_lockstep_rewrite_with_head_backlog(self):
+        """Regression (review finding): rewriting BOTH chain tables in
+        lockstep keeps their tokens equal, but backlog queued in the
+        head's rings was *placed* under the old table — a pre-placed
+        push would deliver it to the old primary's downstream worker.
+        The placement-epoch guard must fall back per-edge until the
+        old-placed backlog drains, staying bit-identical to numpy."""
+        def scenario(backend, **kw):
+            keys, vals = _zipf_stream(8000, 16, seed=11)
+            eng = Engine(partition_backend=backend, batch_ticks=4, **kw)
+            src = eng.add_source(Source("src", keys, vals, 128))
+            filt = eng.add_op(Filter("filter", 4, 8,      # slow: backlog
+                                     predicate=_all_pass))
+            grp = eng.add_op(GroupByAgg("groupby", 4, 8))
+            sink = eng.add_op(Sink("sink", 16, snapshot_every=4))
+            eng.connect(src, filt, 16)
+            eng.connect(filt, grp, 16)
+            eng.connect(grp, sink, 16)
+            for _ in range(4):
+                eng.run_super_tick(eng._fusible_ticks(4))
+            assert filt.backlog_total() > 0
+            for e in eng.edges[:2]:
+                e.routing.move_key(0, 2)     # lockstep: tokens stay equal
+            eng.run()
+            return eng, sink, grp
+
+        a = scenario("numpy")
+        b = scenario("pallas", device_executor="jit")
+        np.testing.assert_array_equal(a[2].received_totals(),
+                                      b[2].received_totals())
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+        # fusion paused (per-edge placements paid) while the old-placed
+        # backlog drained, instead of staying fused and mis-delivering
+        assert b[0].edges[1].exchange.placements > 0
+
+    def test_use_kernel_sink_stays_per_edge(self):
+        """Review finding: a use_kernel sink tail must not be chained —
+        the per-edge sink folds through the Pallas kernel and the chain
+        tail would silently swap in a different accumulation."""
+        def build(**kw):
+            keys, vals = _zipf_stream(1000, 16, seed=7)
+            eng = Engine(partition_backend="pallas",
+                         device_executor="jit", **kw)
+            src = eng.add_source(Source("s", keys, vals, 32))
+            filt = eng.add_op(Filter("f", 1, 32, predicate=_all_pass))
+            sink = eng.add_op(Sink("k", 16, snapshot_every=4))
+            eng.connect(src, filt, 16)
+            eng.connect(filt, sink, 16)
+            eng.run()
+            return eng, sink
+
+        a_eng, a_sink = build(device_use_kernel=True)
+        b_eng, b_sink = build(device_use_kernel=False)
+        np.testing.assert_array_equal(a_sink.counts, b_sink.counts)
+        # kernel sink dispatches per-edge: the fused chain never forms
+        assert a_eng.edges[0].exchange.placements > 0
+        assert b_eng.edges[1].exchange.placements == 0   # chained (no kernel)
+
+    def test_staleness_flip_mid_super_tick(self):
+        """Regression (derived-state staleness window): a chunk staged on
+        a device edge then a table rewrite before its dispatch — the
+        chunk must route under the *stage-time* table, as the host plane
+        did at send time, never with mixed old/new tables."""
+        def scenario(backend, **kw):
+            eng, sink, grp, _ = _pipeline(backend, seed=2, **kw)
+            for _ in range(4):
+                eng.run_super_tick(eng._fusible_ticks(4))
+            e = eng.edges[1]
+            e.send((np.zeros(40, dtype=np.int64), np.ones(40)))
+            e.routing.split_key(0, [0, 1], [0.5, 0.5])   # flip mid-window
+            eng.run()
+            return eng, sink, grp
+
+        a = scenario("numpy")
+        b = scenario("pallas", device_executor="jit")
+        np.testing.assert_array_equal(a[2].received_totals(),
+                                      b[2].received_totals())
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+
+
+class TestDegenerateSnapshotConfigs:
+    """Satellite: ``Sink(snapshot_every=0 | None)`` means "periodic
+    snapshots off" — previously ``int(None)`` blew up the batched
+    scheduler's boundary math and the modulo blew up ``Sink.snapshot``
+    on every plane."""
+
+    @pytest.mark.parametrize("every", [0, None])
+    def test_device_plane_runs_and_matches_numpy(self, every):
+        a = _chain_pipeline("numpy", snapshot_every=every)
+        a[0].run()
+        b = _chain_pipeline("pallas", device_executor="jit",
+                            snapshot_every=every)
+        b[0].run()
+        assert len(a[1].series) == 1      # only the END snapshot
+        _assert_runs_identical(a, b)
+
+
 class TestJitPlaneDemotion:
     def test_two_dim_vals_demote_to_host_path(self):
         eng = Engine(partition_backend="pallas", device_executor="jit")
@@ -385,6 +657,45 @@ class TestDeviceCheckpoint:
         a[0].run()
         b[0].run()
         _assert_runs_identical(a, b)
+
+    def test_chain_restore_with_exhausted_sources_replays_bit_identical(self):
+        """Satellite: fail/recover of a *fused chain* at a super-tick
+        boundary with sources already exhausted — the restored chain
+        must re-upload eagerly (END would stall otherwise) and replay
+        bit-identical to the unfused numpy plane."""
+        kw = dict(num_workers=6, controller=True, hot_frac=0.4, seed=3,
+                  n=6000)
+        b = _chain_pipeline("pallas", device_executor="jit", **kw)
+        while not all(s.finished for s in b[0].sources):
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        assert b[2].backlog_total() > 0      # skewed backlog remains
+        snap = ckpt.snapshot(b[0])
+        for _ in range(3):
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        ckpt.restore(b[0], snap)
+        ticks = b[0].run(max_ticks=20_000)
+        assert b[0].done() and ticks < 20_000
+        a = _chain_pipeline("numpy", **kw)
+        a[0].run()
+        _assert_runs_identical(a, b)
+        _mirrors_equal(a[0], b[0])
+
+    def test_chain_snapshot_cut_matches_host_plane(self):
+        """A checkpoint cut through a fused chain materializes the exact
+        queue contents / totals the host plane holds at the same tick."""
+        a = _chain_pipeline("numpy", num_workers=6, seed=3, n=6000)
+        b = _chain_pipeline("pallas", device_executor="jit",
+                            num_workers=6, seed=3, n=6000)
+        for _ in range(5):
+            a[0].run_super_tick(a[0]._fusible_ticks(4))
+            b[0].run_super_tick(b[0]._fusible_ticks(4))
+        sa, sb = ckpt.snapshot(a[0]), ckpt.snapshot(b[0])
+        for oa, ob in zip(sa["ops"], sb["ops"]):
+            for wa, wb in zip(oa["workers"], ob["workers"]):
+                np.testing.assert_array_equal(wa["queue"][0], wb["queue"][0])
+                np.testing.assert_allclose(wa["queue"][1], wb["queue"][1])
+                assert wa["received"] == wb["received"]
+                assert wa["processed"] == wb["processed"]
 
     def test_snapshot_queue_contents_match_host_plane(self):
         """The checkpoint cut itself is bit-identical: device rings

@@ -555,6 +555,27 @@ class TestBatchedScheduler:
         batched.run()
         np.testing.assert_array_equal(base.sink.counts, batched.sink.counts)
 
+    @pytest.mark.parametrize("every", [0, None])
+    def test_degenerate_snapshot_every(self, every):
+        """Regression: ``Sink(snapshot_every=0 | None)`` means "periodic
+        snapshots off".  The boundary math assumed a truthy int —
+        ``int(None)`` raised in ``_fusible_ticks`` and the modulo raised
+        in ``Sink.snapshot`` on every plane.  Both planes must agree:
+        one END snapshot, identical counts, identical tick grid."""
+        ref = build_w1(reference=True, **self._kw(snapshot_every=every,
+                                                  batch_ticks=1))
+        ref.run()
+        batched = build_w1(**self._kw(snapshot_every=every))
+        batched.run()
+        assert len(ref.sink.series) == 1          # only the END snapshot
+        assert len(batched.sink.series) == 1
+        np.testing.assert_array_equal(ref.sink.counts, batched.sink.counts)
+        np.testing.assert_array_equal(ref.sink.series[0][1],
+                                      batched.sink.series[0][1])
+        # the controller metric grid is unchanged by the missing result
+        # boundary (a metric round due on tick 0 still ends a window)
+        assert batched.engine._fusible_ticks(8) >= 1
+
 
 # --------------------------------------------------------------------- #
 # Controller: phase-2 mitigations retire after a calm window              #
