@@ -33,6 +33,19 @@ the fused rows pay exactly one partition+scatter per super-tick for the
 whole chain (2→1 and 3→1 drops), with sink counts asserted identical
 across every variant and the host-fused numpy baseline.
 
+The ``join_*`` / ``sort_*`` rows (PR 5) document the row-state operator
+set on the device plane: Filter→HashJoinProbe→Sink (W1 shape, 2-rows-
+per-key build side) and RangeSort→Sink (W3 shape).  ``*_pallas`` is the
+device plane at its auto executor (jit on TPU, host twin off TPU — the
+acceptance rows: ≥5x the per-chunk path at chunk=64, ~numpy at ≥512);
+``*_pallas_chunk`` is the per-chunk pallas path those edges previously
+demoted to (the operator subclassed so ``device.wireable``'s exact-type
+check keeps its edge per-chunk — the pre-PR-5 plane); ``*_jit`` is the
+forced-jit off-TPU trajectory row.  Each shape carries an honest
+same-``n`` reference baseline and sink counts asserted identical.
+``join_jit`` vs ``join_jit_unfused`` carries the probe chain fusion
+placement drop (Filter→Probe: 2→1 ``placements_per_supertick``).
+
 Acceptance bar for the device-resident plane (PR 3): ``pallas`` >= 100x
 the PR-2 pallas rows (which re-entered the Pallas interpreter per chunk:
 2,650 tuples/s at chunk=64) and within ~2x of ``numpy`` at chunk >= 512.
@@ -49,7 +62,8 @@ import time
 import numpy as np
 
 from repro.dataflow.engine import Engine, Source
-from repro.dataflow.operators import Filter, GroupByAgg, Sink
+from repro.dataflow.operators import (Filter, GroupByAgg, HashJoinProbe,
+                                      RangeSort, Sink)
 
 from . import common
 from .common import emit
@@ -130,32 +144,83 @@ def _build_chain(n_tuples, num_workers, chunk, *, with_project=True,
 
 
 def _run_chain(n_tuples, num_workers, chunk, *, reps=3, **kw):
-    """Timed chain run + the placements-per-emitting-super-tick metric
-    (measured while sources still emit, so drain-phase windows — which
-    place nothing on any plane — don't dilute the placement-drop
-    provenance the fused rows exist to document)."""
-    best = 0.0
-    for _ in range(reps):
-        eng, sink = _build_chain(n_tuples, num_workers, chunk, **kw)
-        t0 = time.perf_counter()
-        eng.run()
-        dt = time.perf_counter() - t0
-        best = max(best, n_tuples / max(dt, 1e-9))
-    meter, _ = _build_chain(n_tuples, num_workers, chunk, **kw)
-    while not all(s.finished for s in meter.sources):
-        meter.run_super_tick(meter._fusible_ticks(BATCH))
-    placed = sum(getattr(e.exchange, "placements", 0) for e in meter.edges)
-    per_super = placed / max(meter.super_ticks, 1)
-    meter.run()
-    return best, sink, round(per_super, 2)
+    """Timed chain run + the placements-per-emitting-super-tick metric."""
+    best, sink = _time_build(_build_chain, n_tuples, num_workers, chunk,
+                             reps=reps, **kw)
+    per_super = _placements_per_supertick(_build_chain, n_tuples,
+                                          num_workers, chunk, **kw)
+    return best, sink, per_super
 
 
 def _run_one(n_tuples, num_workers, chunk, *, reps=3, **kw):
     """Best-of-``reps`` tuples/sec (this box is noisy; max is the least
     contended run) plus the last run's sink for the correctness check."""
+    return _time_build(_build, n_tuples, num_workers, chunk, reps=reps,
+                       **kw)
+
+
+class _PerChunkProbe(HashJoinProbe):
+    """Deliberate subclass: ``device.wireable`` is exact-type (a subclass
+    may override ``process``), so this keeps the probe edge on the
+    per-chunk pallas backend — the pre-PR-5 plane shape the ``join_*``
+    device rows are measured against."""
+
+
+class _PerChunkSort(RangeSort):
+    """Same trick for the sort edge (pre-PR-5 per-chunk pallas path)."""
+
+
+def _build_join(n_tuples, num_workers, chunk, *, reference=False,
+                backend=None, batch_ticks=BATCH, device_executor=None,
+                device_chain=None, per_chunk=False):
+    """Source -> Filter -> HashJoinProbe -> Sink over one key space (the
+    W1 shape; filter -> probe is the fusible probe chain).  Build side:
+    2 rows per key, so every probe tuple fans out x2."""
+    keys, vals = _stream(n_tuples)
+    eng = Engine(partition_backend=backend, reference=reference,
+                 batch_ticks=batch_ticks, device_executor=device_executor,
+                 device_chain=device_chain)
+    src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
+    filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
+                             predicate=_all_pass))
+    if reference:
+        from repro.dataflow.reference import RefHashJoinProbe as Probe
+    else:
+        Probe = _PerChunkProbe if per_chunk else HashJoinProbe
+    join = eng.add_op(Probe("join", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", NUM_KEYS, snapshot_every=BATCH))
+    eng.connect(src, filt, NUM_KEYS)
+    je = eng.connect(filt, join, NUM_KEYS)
+    eng.connect(join, sink, NUM_KEYS)
+    bk = np.repeat(np.arange(NUM_KEYS, dtype=np.int64), 2)
+    join.install_build(je.routing, bk, np.ones(bk.size))
+    return eng, sink
+
+
+def _build_sort(n_tuples, num_workers, chunk, *, reference=False,
+                backend=None, batch_ticks=BATCH, device_executor=None,
+                device_chain=None, per_chunk=False):
+    """Source -> RangeSort -> Sink (the W3 shape; keys are range ids)."""
+    keys, vals = _stream(n_tuples)
+    eng = Engine(partition_backend=backend, reference=reference,
+                 batch_ticks=batch_ticks, device_executor=device_executor,
+                 device_chain=device_chain)
+    src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
+    if reference:
+        from repro.dataflow.reference import RefRangeSort as Sort
+    else:
+        Sort = _PerChunkSort if per_chunk else RangeSort
+    sort = eng.add_op(Sort("sort", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", NUM_KEYS, snapshot_every=BATCH))
+    eng.connect(src, sort, NUM_KEYS)
+    eng.connect(sort, sink, NUM_KEYS)
+    return eng, sink
+
+
+def _time_build(build, n_tuples, num_workers, chunk, *, reps=3, **kw):
     best = 0.0
     for _ in range(reps):
-        eng, sink = _build(n_tuples, num_workers, chunk, **kw)
+        eng, sink = build(n_tuples, num_workers, chunk, **kw)
         t0 = time.perf_counter()
         eng.run()
         dt = time.perf_counter() - t0
@@ -163,10 +228,95 @@ def _run_one(n_tuples, num_workers, chunk, *, reps=3, **kw):
     return best, sink
 
 
+def _placements_per_supertick(build, n_tuples, num_workers, chunk, **kw):
+    """Placements per emitting super-tick (drain windows excluded), the
+    chain-fusion provenance metric — 2 -> 1 on a fused Filter -> Probe."""
+    meter, _ = build(n_tuples, num_workers, chunk, **kw)
+    while not all(s.finished for s in meter.sources):
+        meter.run_super_tick(meter._fusible_ticks(BATCH))
+    placed = sum(getattr(e.exchange, "placements", 0) for e in meter.edges)
+    per_super = placed / max(meter.super_ticks, 1)
+    meter.run()
+    return round(per_super, 2)
+
+
+def _rowstate_rows():
+    """``join_*`` / ``sort_*`` rows (PR 5): HashJoinProbe and RangeSort
+    as first-class device-plane edges.  ``*_pallas`` is the device plane
+    at its auto executor (fused jit step on TPU, bit-identical host twin
+    off TPU — the acceptance rows); ``*_pallas_chunk`` is the per-chunk
+    pallas path these edges previously demoted to (the operator
+    subclassed so ``wireable`` keeps its edge per-chunk — the pre-PR-5
+    plane); ``*_jit`` forces the jitted step off-TPU (trajectory rows,
+    like ``pallas_jit``).  All with honest same-``n`` reference
+    baselines; ``join_jit`` vs ``join_jit_unfused`` documents the probe
+    chain fusion placement drop (Filter -> Probe: 2 -> 1)."""
+    shapes = common.smoke([(16, 64, 4_000), (16, 512, 20_000)],
+                          [(4, 64, 1_500)])
+    rows = []
+    for num_workers, chunk, n in shapes:
+        for name, build in (("join", _build_join), ("sort", _build_sort)):
+            try:
+                ref_tps, ref_sink = _time_build(build, n, num_workers,
+                                                chunk, reference=True)
+            except ImportError:
+                continue
+            variants = [
+                (f"{name}_reference", dict()),
+                (f"{name}_numpy", dict(backend="numpy")),
+                # the device plane at its auto executor (jit on TPU, the
+                # bit-identical host twin off TPU) — the acceptance rows:
+                # >= 5x the per-chunk path at chunk=64, ~numpy at >= 512
+                (f"{name}_pallas", dict(backend="pallas")),
+                (f"{name}_pallas_chunk",
+                 dict(backend="pallas", device_executor="jit",
+                      per_chunk=True)),
+                # forced-jit trajectory rows (the true device code path's
+                # off-TPU cost, like the pallas_jit rows above)
+                (f"{name}_jit",
+                 dict(backend="pallas", device_executor="jit")),
+            ]
+            if name == "join":
+                variants.append((f"{name}_jit_unfused",
+                                 dict(backend="pallas",
+                                      device_executor="jit",
+                                      device_chain=False)))
+            for mode, opts in variants:
+                if mode.endswith("_reference"):
+                    tps, sink = ref_tps, ref_sink
+                else:
+                    try:
+                        tps, sink = _time_build(build, n, num_workers,
+                                                chunk, **opts)
+                    except ImportError:
+                        continue        # container without jax
+                assert np.array_equal(sink.counts, ref_sink.counts), mode
+                row = dict(mode=mode, n_tuples=n, workers=num_workers,
+                           chunk=chunk, tuples_per_sec=round(tps),
+                           speedup_vs_reference=round(tps / ref_tps, 2))
+                if mode.startswith("join_jit"):
+                    row["placements_per_supertick"] = \
+                        _placements_per_supertick(_build_join, n,
+                                                  num_workers, chunk,
+                                                  **opts)
+                rows.append(row)
+    return rows
+
+
 def _plane_of(mode: str) -> str:
     """Which data plane a mode's rows actually measured — stamped into
     the perf JSON so a 'pallas' row on a CPU box (host twin) is never
     mistaken for the jitted device step when diffing across PRs."""
+    if mode.startswith(("join_", "sort_")):
+        if mode.endswith("_reference"):
+            return "reference"
+        if mode.endswith("_numpy"):
+            return "host-fused"
+        if mode.endswith("_pallas_chunk"):
+            return "pallas-per-chunk"
+        if mode.endswith("_pallas"):
+            return _plane_of("pallas")  # auto executor: jit / host twin
+        return "device-jit"             # *_jit, *_jit_unfused
     if mode.startswith("chain_") and mode.endswith("_numpy"):
         return "host-fused"
     if mode.startswith("chain_"):
@@ -271,6 +421,7 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
                 speedup_vs_reference=round(tps / ref_tps, 2)))
     if include_pallas:
         rows += _chain_rows(common.smoke(40_000, 2_000))
+        rows += _rowstate_rows()
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
           "speedup_vs_reference", "placements_per_supertick"],

@@ -97,13 +97,19 @@ def snapshot(engine: Engine) -> Dict:
     A checkpoint is one of the device plane's materialization
     boundaries: every device-resident operator first syncs its rings,
     keyed state and counters into the host structures this snapshot
-    copies, so the cut is bit-identical to the host plane's.  Fused
-    chains need no special casing here: every stage of a chain owns its
-    own rings/fold/mirrors (the fusion shares *placement work*, not
-    state), so the per-runtime ``sync_host`` below cuts through a chain
-    exactly as it cuts through per-edge runtimes — and a head's
-    version-stale staged backlog is flushed under its stage-time table
-    first (``DeviceOpRuntime._flush_stale_staged``).
+    copies, so the cut is bit-identical to the host plane's.  Row-state
+    operators (HashJoinBuild / RangeSort) materialize through the same
+    path: the device's arrival-order row log regroups by key into each
+    worker's ``ScopeRows`` state/scattered pair (scope arrays
+    bit-identical to the host plane's segment appends), and ``restore``
+    simply deep-copies those mappings back — ``on_restore`` re-uploads
+    the row store, probe match tables and rings from the restored host
+    truth.  Fused chains need no special casing here: every stage of a
+    chain owns its own rings/fold/mirrors (the fusion shares *placement
+    work*, not state), so the per-runtime ``sync_host`` below cuts
+    through a chain exactly as it cuts through per-edge runtimes — and a
+    head's version-stale staged backlog is flushed under its stage-time
+    table first (``DeviceOpRuntime._flush_stale_staged``).
     """
     for op in engine.ops:
         if op.device is not None:

@@ -28,6 +28,44 @@ the next stay on the device as padded, validity-masked
 :class:`DeviceChunk` buffers, so consecutive fused edges share one
 residency domain.
 
+Row-state operators (HashJoin / Sort)
+-------------------------------------
+The full paper operator set runs on this plane, not just keyed folds:
+
+``rows``  (HashJoinBuild, RangeSort) — keyed *row* state lives in a
+          device-resident segment store mirroring
+          :class:`~repro.dataflow.state.ScopeRows`: per worker a flat
+          ``[W, rcap]`` (key, val, owned) row log in arrival order plus
+          a host length mirror, with amortized-doubling capacity growth.
+          The fused step appends every popped lane at
+          ``row_len + within-pop-rank`` with an owned/scattered flag
+          frozen at fold time (``owner[key] == worker``), so SBR splits
+          park overflow rows exactly where the host plane's
+          ``_append_segments`` would.  Boundary materialization regroups
+          the log by key (one stable counting pass per worker) into the
+          operator's ``ScopeRows`` state/scattered pair — bit-identical
+          scope arrays, because both planes preserve per-scope arrival
+          order — and the upload inverse (``ScopeRows.export_rows``)
+          round-trips it.  With ``device_use_kernel=True`` a split-table
+          ingest runs the fused Pallas ``partition_scatter_fold`` kernel:
+          dest/rank/hist feed the ring scatter and the kernel's per-key
+          count column doubles as the key-arrival stats fold.
+``probe`` (HashJoinProbe) — the installed build side is immutable, so
+          the probe is stateless per tuple given a dense ``[W, K]``
+          match-count table (owned + scattered build rows summed,
+          refreshed from host state whenever a migration marks it
+          stale).  The step pops a budgeted window and *expands* it
+          (:func:`repro.kernels.ref.match_expand`): each lane emitted
+          ``mcounts[w, key]`` times into a padded, masked
+          ``[W, B * M]`` DeviceChunk, where ``M`` bounds the per-tuple
+          fanout (the max match count, a static spec field) — so the
+          emit buffer always covers the worst case and no mid-super-tick
+          host round-trip or carry-over is ever needed; edges whose
+          ``W * B * M`` would exceed ``MAX_EMIT_CELLS`` demote to the
+          host path instead of risking an unbounded buffer.  Because a
+          probe preserves its input keys, a token-equal probe edge joins
+          multi-edge chain fusion like a map stage (below).
+
 Multi-edge chain fusion
 -----------------------
 Consecutive device edges with *routing-equivalent* tables collapse into
@@ -110,6 +148,12 @@ MAX_FOLD_CELLS = 1 << 22
 #: and is unaffected).
 MAX_SERVICE_RATE = 1 << 20
 
+#: probe-expand ceiling: the emit buffer is W * B * M lanes (M = the max
+#: per-tuple build-match fanout, so it always covers the worst case and
+#: carry-over never has to defer outputs past the host plane's tick);
+#: a build table skewed enough to blow this demotes the edge instead.
+MAX_EMIT_CELLS = 1 << 22
+
 
 def _jnp():
     import jax.numpy as jnp
@@ -144,13 +188,18 @@ def resolve_executor(requested: Optional[str]) -> str:
 
 
 def wireable(op, num_keys: int) -> bool:
-    """Is ``op`` a device-foldable destination for an edge of ``num_keys``?
+    """Is ``op`` a device-wireable destination for an edge of ``num_keys``?
 
-    Exact types only (a subclass may override ``process``); the fold
-    state is dense per (worker, key), so wide key spaces stay host-side.
+    Exact types only (a subclass may override ``process``); the dense
+    per-(worker, key) structures — keyed folds, the probe match table —
+    keep wide key spaces host-side.  This is the full paper operator
+    set: Filter / Project / GroupByAgg / Sink plus the row-state
+    HashJoinBuild / HashJoinProbe / RangeSort.
     """
-    from .operators import Filter, GroupByAgg, Project, Sink
-    return (type(op) in (Filter, Project, GroupByAgg, Sink)
+    from .operators import (Filter, GroupByAgg, HashJoinBuild,
+                            HashJoinProbe, Project, RangeSort, Sink)
+    return (type(op) in (Filter, Project, GroupByAgg, Sink,
+                         HashJoinBuild, HashJoinProbe, RangeSort)
             and op.num_workers * num_keys <= MAX_FOLD_CELLS
             and (type(op) is Sink or op.service_rate <= MAX_SERVICE_RATE))
 
@@ -183,7 +232,7 @@ class DeviceChunk:
 class StepSpec:
     """The static half of a jitted step (hashable: keys the trace cache)."""
 
-    kind: str                    # "fold" | "filter" | "project" | "sink"
+    kind: str        # "fold" | "filter" | "project" | "sink" | "probe" | "rows"
     W: int                       # destination workers
     K: int                       # key-space size
     cap: int                     # ring capacity (power of two)
@@ -193,31 +242,44 @@ class StepSpec:
     track_stats: bool            # per-key arrival stats fold armed
     use_kernel: bool             # partition core via the Pallas kernel
     fn: Optional[Callable] = None   # Filter predicate / Project map
+    M: int = 1                   # probe: max per-tuple match fanout
+    rcap: int = 0                # rows: segment-store capacity (pow2)
 
 
 # --------------------------------------------------------------------- #
 # Step building blocks (pure jnp; caller holds the x64 context)           #
 # --------------------------------------------------------------------- #
-def _advance_and_route(spec: StepSpec, consts, count, keys, valid):
-    """Device twin of ``RoutingTable.advance_counters`` + the canonical
-    inverse-CDF rule: (dest, rank, hist, new_count); dead lanes advance
-    neither the split counters nor anyone's rank."""
+def _split_counters(spec: StepSpec, consts, count, keys, valid):
+    """Device twin of ``RoutingTable.advance_counters``: per-record
+    running split-key counters (within-chunk occurrence + persistent
+    count) and the advanced persistent counts.  Dead lanes and one-hot
+    keys consume nothing."""
     import jax
+    jnp = _jnp()
+    live = valid & consts["is_split"][keys]
+    n = keys.shape[0]
+    arange = jnp.arange(n, dtype=count.dtype)
+    sent = jnp.where(live, keys, spec.K)          # dead lanes sort last
+    order = jnp.argsort(sent, stable=True)
+    sk = sent[order]
+    starts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(starts, arange, 0))
+    occ = jnp.zeros(n, count.dtype).at[order].set(arange - seg_start)
+    counters = jnp.where(live, count[keys] + occ, 0)
+    new_count = count.at[keys].add(live.astype(count.dtype))
+    return counters, new_count
+
+
+def _advance_and_route(spec: StepSpec, consts, count, keys, valid):
+    """``_split_counters`` + the canonical inverse-CDF rule:
+    (dest, rank, hist, new_count); dead lanes advance neither the split
+    counters nor anyone's rank."""
     jnp = _jnp()
     from ..core.ops import ld_thresholds
 
     if spec.any_split:
-        live = valid & consts["is_split"][keys]
-        n = keys.shape[0]
-        arange = jnp.arange(n, dtype=count.dtype)
-        sent = jnp.where(live, keys, spec.K)      # dead lanes sort last
-        order = jnp.argsort(sent, stable=True)
-        sk = sent[order]
-        starts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
-        seg_start = jax.lax.cummax(jnp.where(starts, arange, 0))
-        occ = jnp.zeros(n, count.dtype).at[order].set(arange - seg_start)
-        counters = jnp.where(live, count[keys] + occ, 0)
-        new_count = count.at[keys].add(live.astype(count.dtype))
+        counters, new_count = _split_counters(spec, consts, count, keys,
+                                              valid)
         if spec.use_kernel:
             # Fused Pallas partition core: bit-identical destinations by
             # the canonical rule (interpret mode off TPU).
@@ -280,12 +342,46 @@ def _fold_stats(spec: StepSpec, state, keys, valid):
 
 def _ingest(spec: StepSpec, consts, state, chunk):
     """Route + ring-scatter one staged chunk (the partition half)."""
+    if spec.kind == "rows" and spec.use_kernel and spec.any_split:
+        return _ingest_rows_kernel(spec, consts, state, chunk)
     keys, vals, valid = chunk
     dest, rank, hist, count = _advance_and_route(
         spec, consts, state["count"], keys, valid)
     state = _push(spec, dict(state, count=count), keys, vals, valid,
                   dest, rank, hist)
     return _fold_stats(spec, state, keys, valid), hist
+
+
+def _ingest_rows_kernel(spec: StepSpec, consts, state, chunk):
+    """Row-state ingest through the fused Pallas ``partition_scatter_fold``
+    kernel (``device_use_kernel=True``, split table): one kernel pass
+    yields dest + within-destination rank + histogram for the ring
+    scatter *and* the chunk's per-key live-lane counts, which are exactly
+    the key-arrival stats fold — a monitored build/sort edge pays no
+    separate stats pass.  Destinations are bit-identical to the jnp path
+    (the canonical rule; one-hot rows resolve to their primary under the
+    saturated CDF for every u < 1)."""
+    import importlib
+    jnp = _jnp()
+    keys, vals, valid = chunk
+    counters, new_count = _split_counters(spec, consts, state["count"],
+                                          keys, valid)
+    kpart = importlib.import_module("repro.kernels.partition")
+    kdest, krank, khist, kcnt, _ = kpart.partition_scatter_fold(
+        keys.astype(jnp.int32), counters.astype(jnp.int32),
+        vals.astype(jnp.float32), consts["cdf"],
+        valid=valid.astype(jnp.int32), cdf=consts["cdf"],
+        interpret=_interpret())
+    dest = kdest.astype(keys.dtype)
+    rank = krank.astype(keys.dtype)
+    hist = khist.astype(state["count"].dtype)
+    state = _push(spec, dict(state, count=new_count), keys, vals, valid,
+                  dest, rank, hist)
+    if spec.track_stats:
+        cnt = kcnt.astype(state["arrived"].dtype)
+        state = dict(state, arrived=state["arrived"] + cnt,
+                     totals=state["totals"] + cnt)
+    return state, hist
 
 
 def _push_placed(spec: StepSpec, state, ok, ov, keep, hist):
@@ -322,6 +418,45 @@ def _map_stage(spec: StepSpec, wk, wv, wmask):
         ov = ov.astype(wv.dtype)
         keep = wmask
     return ok, ov, keep
+
+
+def _expand_stage(spec: StepSpec, state, wk, wv, wmask):
+    """Hash-join probe expansion of a popped ``[W, B]`` window: each live
+    lane emitted ``mcounts[w, key]`` times (owned + scattered build rows
+    summed) into a padded ``[W, B * M]`` block, lanes in stream order —
+    the device twin of ``np.repeat(keys, matches)`` per worker.  ``M``
+    bounds the per-tuple fanout (max match count, static), so the emit
+    buffer covers the worst case and nothing ever carries over."""
+    import importlib
+    kref = importlib.import_module("repro.kernels.ref")
+    return kref.match_expand(wk, wv, wmask, state["mcounts"],
+                             spec.B * spec.M)
+
+
+def _fold_rows(spec: StepSpec, consts, state, wk, wv, wmask, take):
+    """Segment-append of a popped ``[W, B]`` window into the device row
+    store (the HashJoinBuild / RangeSort tail): lane *j* of worker *w*
+    lands at ``row_len[w] + rank_j`` (within-pop arrival rank) carrying
+    its key and an owned flag frozen at fold time — the device mirror of
+    ``_RowStateOp._append_segments``'s owned/scattered routing, kept as
+    one flat arrival-order log and regrouped by key only at host
+    boundaries."""
+    jnp = _jnp()
+    dt = state["rlen"].dtype
+    wid = jnp.arange(spec.W, dtype=wk.dtype)[:, None]
+    owned = consts["owner"][wk] == wid
+    kin = wmask.astype(dt)
+    rank = jnp.cumsum(kin, axis=1) - kin
+    pos = state["rlen"][:, None] + rank
+    flat = jnp.where(wmask, wid.astype(dt) * spec.rcap + pos,
+                     spec.W * spec.rcap).reshape(-1)
+    bk = state["bk"].reshape(-1).at[flat].set(
+        wk.reshape(-1), mode="drop").reshape(spec.W, spec.rcap)
+    bv = state["bv"].reshape(-1).at[flat].set(
+        wv.reshape(-1), mode="drop").reshape(spec.W, spec.rcap)
+    bo = state["bo"].reshape(-1).at[flat].set(
+        (wmask & owned).reshape(-1), mode="drop").reshape(spec.W, spec.rcap)
+    return dict(state, bk=bk, bv=bv, bo=bo, rlen=state["rlen"] + take)
 
 
 def _fold_popped(spec: StepSpec, consts, state, wk, wv, wmask):
@@ -363,7 +498,10 @@ def _make_step_fold():
         else:
             hist = jnp.zeros((spec.W,), state["tail"].dtype)
         wk, wv, wmask, take, state = _pop(spec, state, budget)
-        state = _fold_popped(spec, consts, state, wk, wv, wmask)
+        if spec.kind == "rows":
+            state = _fold_rows(spec, consts, state, wk, wv, wmask, take)
+        else:
+            state = _fold_popped(spec, consts, state, wk, wv, wmask)
         return state, (hist, take)
 
     return step
@@ -380,7 +518,10 @@ def _make_step_map():
         else:
             hist = jnp.zeros((spec.W,), state["tail"].dtype)
         wk, wv, wmask, take, state = _pop(spec, state, budget)
-        ok, ov, keep = _map_stage(spec, wk, wv, wmask)
+        if spec.kind == "probe":
+            ok, ov, keep = _expand_stage(spec, state, wk, wv, wmask)
+        else:
+            ok, ov, keep = _map_stage(spec, wk, wv, wmask)
         out = (ok.reshape(-1), ov.reshape(-1), keep.reshape(-1))
         emitted = keep.sum(axis=1, dtype=take.dtype)
         return state, out, (hist, take, emitted)
@@ -429,11 +570,17 @@ def _make_step_chain():
                     continue
                 st = _push_placed(spec, st, ok, ov, keep, hist)
             wk, wv, wmask, take, st = _pop(spec, st, budgets[i])
-            if spec.kind in ("filter", "project"):
-                ok, ov, keep = _map_stage(spec, wk, wv, wmask)
+            if spec.kind in ("filter", "project", "probe"):
+                ok, ov, keep = (_expand_stage(spec, st, wk, wv, wmask)
+                                if spec.kind == "probe"
+                                else _map_stage(spec, wk, wv, wmask))
                 carry = (ok, ov, keep)
                 metrics.append((hist, take,
                                 keep.sum(axis=1, dtype=take.dtype)))
+            elif spec.kind == "rows":           # build / sort tail
+                st = _fold_rows(spec, consts, st, wk, wv, wmask, take)
+                metrics.append((hist, take, None))
+                carry = None
             else:                               # fold tail
                 st = _fold_popped(spec, consts, st, wk, wv, wmask)
                 metrics.append((hist, take, None))
@@ -488,8 +635,10 @@ def _step_for(kind: str):
     new :class:`StepSpec` (shape growth, rewrite arming, new user fn)."""
     if kind not in _STEP_CACHE:
         _STEP_CACHE[kind] = {"fold": _make_step_fold,
+                             "rows": _make_step_fold,
                              "filter": _make_step_map,
                              "project": _make_step_map,
+                             "probe": _make_step_map,
                              "sink": _make_step_sink,
                              "chain": _make_step_chain}[kind]()
     return _STEP_CACHE[kind]
@@ -516,7 +665,8 @@ class DeviceOpRuntime:
     """
 
     def __init__(self, op, edge, engine, *, use_kernel: bool = False):
-        from .operators import Filter, GroupByAgg, Project, Sink
+        from .operators import (Filter, GroupByAgg, HashJoinBuild,
+                                HashJoinProbe, Project, RangeSort, Sink)
 
         self.op = op
         self.edge = edge
@@ -524,12 +674,19 @@ class DeviceOpRuntime:
         self.routing = edge.routing
         self.use_kernel = bool(use_kernel)
         self.kind = {Filter: "filter", Project: "project",
-                     GroupByAgg: "fold", Sink: "sink"}[type(op)]
+                     GroupByAgg: "fold", Sink: "sink",
+                     HashJoinProbe: "probe", HashJoinBuild: "rows",
+                     RangeSort: "rows"}[type(op)]
         self.W = op.num_workers
         self.K = edge.routing.num_keys
         self.NB = 0                    # upload padding width (static)
         self.B = 0                     # pop-window width (static)
         self.cap = 0                   # ring capacity (static, pow2)
+        self.M = 1                     # probe emit fanout bound (static)
+        self.rcap = 0                  # rows segment-store capacity (pow2)
+        #: rows kind: per-worker row-log length (exact host mirror, the
+        #: twin of ``ScopeRows.total_rows()`` across state + scattered).
+        self.rows_len = np.zeros(op.num_workers, dtype=np.int64)
         self.state = None              # device pytree (lazily allocated)
         self.consts = None
         self._consts_version = -1
@@ -574,7 +731,8 @@ class DeviceOpRuntime:
                         track_stats=bool(self.op.track_key_stats
                                          and self.op.arrived_by_key
                                          is not None),
-                        use_kernel=self.use_kernel, fn=self._fn)
+                        use_kernel=self.use_kernel, fn=self._fn,
+                        M=self.M, rcap=self.rcap)
 
     def backlog_total(self) -> int:
         return int(self.lens.sum()) + self.staged_live
@@ -692,6 +850,13 @@ class DeviceOpRuntime:
                     st[name] = jnp.zeros((self.W, self.K), jnp.float64)
                 for name in ("present", "scat_present"):
                     st[name] = jnp.zeros((self.W, self.K), bool)
+            if self.kind == "probe":
+                st["mcounts"] = jnp.zeros((self.W, self.K), jnp.int64)
+            if self.kind == "rows":
+                st.update(bk=jnp.zeros((self.W, self.rcap), jnp.int64),
+                          bv=jnp.zeros((self.W, self.rcap), jnp.float64),
+                          bo=jnp.zeros((self.W, self.rcap), bool),
+                          rlen=jnp.zeros(self.W, jnp.int64))
             if self.kind == "sink":
                 st["counts"] = jnp.zeros(self.K, jnp.int64)
                 st["sums"] = jnp.zeros(self.K, jnp.float64)
@@ -737,6 +902,38 @@ class DeviceOpRuntime:
                     scat_counts=jnp.asarray(np.stack([s[0] for s in scat])),
                     scat_sums=jnp.asarray(np.stack([s[1] for s in scat])),
                     scat_present=jnp.asarray(np.stack([s[2] for s in scat])))
+            if self.kind == "probe":
+                # Dense match table: owned + scattered build rows SUMMED
+                # per (worker, key) — a split build key may hold rows in
+                # both (the host plane's fixed probe semantics).  M (the
+                # max fanout) is static: a change retraces the step.
+                mc = np.stack([np.asarray(w.state.counts)
+                               + np.asarray(w.scattered.counts)
+                               for w in op.workers])
+                self.state["mcounts"] = jnp.asarray(mc)
+                self.M = max(int(mc.max(initial=1)), 1)
+            if self.kind == "rows":
+                need = max(int(w.state.total_rows()
+                               + w.scattered.total_rows())
+                           for w in op.workers)
+                if need + self.B > self.rcap:
+                    self.rcap = _pow2(2 * max(need + self.B, 1))
+                bk = np.zeros((self.W, self.rcap), np.int64)
+                bv = np.zeros((self.W, self.rcap), np.float64)
+                bo = np.zeros((self.W, self.rcap), bool)
+                for w, worker in enumerate(op.workers):
+                    ok_k, ok_v = worker.state.export_rows()
+                    sc_k, sc_v = worker.scattered.export_rows()
+                    n1, n2 = int(ok_k.size), int(sc_k.size)
+                    bk[w, :n1] = ok_k
+                    bv[w, :n1] = ok_v
+                    bo[w, :n1] = True
+                    bk[w, n1:n1 + n2] = sc_k
+                    bv[w, n1:n1 + n2] = sc_v
+                    self.rows_len[w] = n1 + n2
+                self.state.update(bk=jnp.asarray(bk), bv=jnp.asarray(bv),
+                                  bo=jnp.asarray(bo),
+                                  rlen=jnp.asarray(self.rows_len.copy()))
             if self.kind == "sink":
                 self.state.update(counts=jnp.asarray(op.counts.copy()),
                                   sums=jnp.asarray(op.sums.copy()))
@@ -778,6 +975,13 @@ class DeviceOpRuntime:
         elif need > self.cap and self.kind != "sink":
             self.cap = _pow2(2 * need)
             self._regrow_rings()
+        if (self.kind == "rows" and self.state is not None
+                and int(self.rows_len.max(initial=0)) + self.B > self.rcap):
+            # The row log only grows (appends, never pops): double it so
+            # the next dispatch's worst-case append (<= B rows) fits.
+            self.rcap = _pow2(2 * (int(self.rows_len.max(initial=0))
+                                   + self.B))
+            self._regrow_rowstore()
 
     def _regrow_rings(self) -> None:
         """Re-layout the rings at a larger capacity (content preserved)."""
@@ -797,6 +1001,24 @@ class DeviceOpRuntime:
             self.state.update(rk=jnp.asarray(new_k), rv=jnp.asarray(new_v),
                               head=jnp.zeros(self.W, jnp.int64),
                               tail=jnp.asarray(self.lens.copy()))
+
+    def _regrow_rowstore(self) -> None:
+        """Re-layout the flat row log at a larger capacity (append-only:
+        no ring wrap, so regrowth is a prefix copy per column)."""
+        jnp = _jnp()
+        bk = np.asarray(self.state["bk"])
+        bv = np.asarray(self.state["bv"])
+        bo = np.asarray(self.state["bo"])
+        old = bk.shape[1]
+        new_k = np.zeros((self.W, self.rcap), np.int64)
+        new_v = np.zeros((self.W, self.rcap), np.float64)
+        new_o = np.zeros((self.W, self.rcap), bool)
+        new_k[:, :old] = bk
+        new_v[:, :old] = bv
+        new_o[:, :old] = bo
+        with _x64():
+            self.state.update(bk=jnp.asarray(new_k), bv=jnp.asarray(new_v),
+                              bo=jnp.asarray(new_o))
 
     # ---- routing constants / split counters --------------------------- #
     def _refresh_consts(self) -> None:
@@ -866,6 +1088,12 @@ class DeviceOpRuntime:
     def tick(self, budget: int) -> List:
         if self.state is None and not self.staged:
             return []                  # nothing ever arrived
+        if self.kind == "probe" and not self._probe_capacity_ok(budget):
+            # A build table (or budget) skewed enough that the padded
+            # emit buffer W * B * M would blow the ceiling: the host
+            # path handles unbounded fanout natively.
+            self.demote("probe fanout")
+            return self.op.tick(budget)
         chain = self._chain_for_dispatch(budget)
         if chain is not None:
             return self._dispatch_chain(chain, budget)
@@ -894,13 +1122,38 @@ class DeviceOpRuntime:
             self.demote("untraceable fn")
             return self.op.tick(budget)
 
+    def _host_fanout(self) -> int:
+        """Max per-(worker, key) build matches, read from host state."""
+        mc = max((int((np.asarray(w.state.counts)
+                       + np.asarray(w.scattered.counts)).max(initial=0))
+                  for w in self.op.workers), default=0)
+        return max(mc, 1)
+
+    def _probe_capacity_ok(self, budget: int) -> bool:
+        """Would the probe emit buffer stay under ``MAX_EMIT_CELLS``?
+        Uses the host-state fanout whenever the device match table is
+        absent or stale (install_build / a migration just ran)."""
+        B = max(self.B, int(budget),
+                self.engine.batch_ticks * self.op.service_rate)
+        M = (self.M if self.state is not None and not self._reload_pending
+             else self._host_fanout())
+        return self.W * B * M <= MAX_EMIT_CELLS
+
+    def _emit_bound(self, budget: int) -> int:
+        """Most records this stage can hand its chain follower inside one
+        dispatch: the pop budget, times the match fanout for a probe."""
+        if self.kind == "probe":
+            return int(budget) * max(self.M, 1)
+        return int(budget)
+
     # ---- chain fusion (multi-edge shared placement) -------------------- #
     def _preserves_keys(self) -> bool:
-        """May this map stage's output reuse its input placement?  A
-        Filter only masks, so always; a Project must declare
+        """May this stage's output reuse its input placement?  A Filter
+        only masks, so always; a probe repeats its input records without
+        re-keying, so always; a Project must declare
         ``preserves_keys=True`` (an arbitrary fn may re-key, which would
         invalidate the shared placement)."""
-        if self.kind == "filter":
+        if self.kind in ("filter", "probe"):
             return True
         return bool(getattr(self.op, "preserves_keys", False))
 
@@ -934,7 +1187,7 @@ class DeviceOpRuntime:
         scheduler's ``k * service_rate`` so follower budgets are known
         (manual odd-budget ticks stay per-edge)."""
         eng = self.engine
-        if (self.kind not in ("filter", "project")
+        if (self.kind not in ("filter", "project", "probe")
                 or self.chain_down is None or self._chain_disabled
                 or not getattr(eng, "device_chain", True)
                 or self.op.device is not self or self.op.finished
@@ -958,9 +1211,12 @@ class DeviceOpRuntime:
                 # accumulation) — keep use_kernel sinks per-edge so the
                 # A/B contract of device_use_kernel is unchanged.
                 break
+            if (d.kind == "probe" and not d._probe_capacity_ok(
+                    eng._super_k * d.op.service_rate)):
+                break                   # d's own tick will demote it
             members.append(d)
-            if (d.kind not in ("filter", "project") or d._chain_disabled
-                    or not d._preserves_keys()):
+            if (d.kind not in ("filter", "project", "probe")
+                    or d._chain_disabled or not d._preserves_keys()):
                 break                   # d is the chain's tail
             r = d
         if len(members) < 2:
@@ -995,8 +1251,11 @@ class DeviceOpRuntime:
                 r._host_fresh = False
                 empty_before.append(int(r.lens.sum()) == 0)
                 # Followers receive up to the upstream stage's per-ring
-                # budget inside the dispatch itself (never staged).
-                r._prep(b, incoming=budgets[i - 1] if i else 0)
+                # *emit bound* inside the dispatch itself (never staged):
+                # the pop budget, fanned out by M for a probe stage
+                # (whose M is final — its _prep already ran).
+                r._prep(b, incoming=members[i - 1]._emit_bound(
+                    budgets[i - 1]) if i else 0)
             spec0 = self._spec()
             chunks, self.staged, self.staged_live = self.staged, [], 0
             dc = None
@@ -1054,6 +1313,8 @@ class DeviceOpRuntime:
             else:
                 take = np.asarray(take)
                 r.lens += hist - take
+                if r.kind == "rows":    # every popped row was appended
+                    r.rows_len += take
                 for w, worker in enumerate(r.op.workers):
                     worker.stats.processed_total += int(take[w])
             if emitted is not None:
@@ -1118,7 +1379,7 @@ class DeviceOpRuntime:
                            np.int64(b))
                 if ch is not None:
                     self.placements += 1
-                if self.kind == "fold":
+                if self.kind in ("fold", "rows"):
                     self.state, (hist, take) = res
                     emitted = None
                 else:
@@ -1129,6 +1390,8 @@ class DeviceOpRuntime:
                 self.edge.exchange.account(hist)
                 self.received += hist
                 self.lens += hist - take
+                if self.kind == "rows":   # every popped row was appended
+                    self.rows_len += take
                 for w, worker in enumerate(self.op.workers):
                     worker.stats.processed_total += int(take[w])
                 if emitted is not None:
@@ -1202,6 +1465,22 @@ class DeviceOpRuntime:
             for w, worker in enumerate(op.workers):
                 worker.state.load_dense(cnt[w], sm[w], pres[w])
                 worker.scattered.load_dense(scnt[w], ssm[w], spres[w])
+        if self.kind == "rows":
+            # Regroup the arrival-order row log by key into the host
+            # ScopeRows pair (owned flag -> state vs scattered); the
+            # stable grouping inside ``extend_segments`` preserves each
+            # scope's arrival order, so scope arrays are bit-identical
+            # to the host plane's per-chunk segment appends.
+            bk = np.asarray(self.state["bk"])
+            bv = np.asarray(self.state["bv"])
+            bo = np.asarray(self.state["bo"])
+            for w, worker in enumerate(op.workers):
+                n = int(self.rows_len[w])
+                k_w, v_w, o_w = bk[w, :n], bv[w, :n], bo[w, :n]
+                worker.state.clear()
+                worker.scattered.clear()
+                worker.state.extend_segments(k_w[o_w], v_w[o_w])
+                worker.scattered.extend_segments(k_w[~o_w], v_w[~o_w])
         if self.kind == "sink":
             self.sync_sink_counts()
             parts = [ch.to_host() for ch in self.staged]

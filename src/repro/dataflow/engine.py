@@ -39,10 +39,12 @@ partition backend — ``"numpy"`` (default) or ``"pallas"`` (the
 device-resident exchange plane; bit-identical destinations) — is chosen
 per engine via ``Engine(partition_backend=...)`` or globally via the
 ``REPRO_PARTITION_BACKEND`` environment variable.  Under the pallas
-plane, every eligible edge (single-upstream Filter / Project / GroupBy /
-Sink destination) is promoted into :mod:`repro.dataflow.device`: one
-persistent jitted step per edge advances device-resident chunks, ring
-queues, split counters and keyed folds for a whole super-tick, and the
+plane, every eligible edge (a single-upstream Filter / Project /
+GroupBy / Sink / HashJoinBuild / HashJoinProbe / RangeSort destination)
+is promoted into :mod:`repro.dataflow.device`: one persistent jitted
+step per edge advances device-resident chunks, ring queues, split
+counters, keyed folds / row stores / probe expansions for a whole
+super-tick, and the
 host materializes state only at the boundaries ``_fusible_ticks``
 computes (``Engine(device_executor=...)`` picks the jitted step vs the
 bit-identical numpy host twin; default: jit on TPU, twin off TPU).
@@ -346,17 +348,20 @@ class Engine:
         """Promote an eligible pallas edge into the device-resident plane.
 
         Eligible: the edge resolved to the pallas backend and the
-        destination is a single-upstream Filter / Project / GroupByAgg /
-        Sink with a bounded (worker x key) fold.  Executor "jit" attaches
-        a :class:`~repro.dataflow.device.DeviceOpRuntime` (the fused
+        destination is a single-upstream operator of the full paper set —
+        Filter / Project / GroupByAgg / Sink plus the row-state
+        HashJoinBuild / HashJoinProbe / RangeSort — with a bounded
+        (worker x key) dense structure.  Executor "jit" attaches a
+        :class:`~repro.dataflow.device.DeviceOpRuntime` (the fused
         jitted step); "host" (the off-TPU default) swaps in the fused
         numpy exchange — the bit-identical host twin.  Ineligible edges
         keep the per-chunk pallas backend.
 
         Consecutive jit edges are additionally *chain-linked* when the
-        producer is itself a device-resident map stage (Filter /
-        Project): if at dispatch time both edges' routing tables are
-        provably routing-equivalent (``RoutingTable.routing_token``),
+        producer is itself a device-resident key-preserving stage
+        (Filter / Project / HashJoinProbe — a probe only repeats its
+        input records): if at dispatch time both edges' routing tables
+        are provably routing-equivalent (``RoutingTable.routing_token``),
         the chain head advances the whole chain in one fused dispatch,
         reusing the upstream placement instead of re-partitioning (see
         :mod:`repro.dataflow.device`).  The link is structural only —
@@ -384,7 +389,7 @@ class Engine:
             edge.device_plane = "jit"
             up = getattr(producer, "device", None)
             if (isinstance(up, dev.DeviceOpRuntime)
-                    and up.kind in ("filter", "project")
+                    and up.kind in ("filter", "project", "probe")
                     and producer.device is up):
                 up.chain_down = runtime
                 runtime.chain_up = up

@@ -42,25 +42,37 @@ Backends
             correctness (one-time RuntimeWarning: it is a comparison
             sort again).
 ``pallas``  the device-resident plane.  Per *eligible* edge — a
-            single-upstream Filter / Project / GroupByAgg / Sink
-            destination — the engine promotes the whole edge into
+            single-upstream destination from the full paper operator
+            set: Filter / Project / GroupByAgg / Sink plus the
+            row-state HashJoinBuild / HashJoinProbe / RangeSort — the
+            engine promotes the whole edge into
             :mod:`repro.dataflow.device`: chunks, ring queues, the
             float32 row-CDF, per-key split counters and the downstream
-            keyed fold live as ``jnp`` arrays across a ``batch_ticks``
+            keyed state live as ``jnp`` arrays across a ``batch_ticks``
             super-tick, advanced by one persistent jitted step (donated
             buffers) that fuses partition → within-destination rank →
-            ring scatter → budgeted pop → vectorized fold in a single
-            dispatch per edge; the host reads back only O(num_workers)
-            control metrics per dispatch and materializes state at the
-            boundaries ``Engine._fusible_ticks`` already computes (sink
-            snapshots, controller metric rounds, checkpoints, END,
-            rewrites).  Consecutive jit edges whose RoutingTables are
-            provably routing-equivalent (``RoutingTable.routing_token``:
-            one-hot tables over the same key space with identical
+            ring scatter → budgeted pop → a kind-specific tail in a
+            single dispatch per edge: a vectorized keyed fold (GroupBy /
+            Sink), a stateless map (Filter / Project), a segment append
+            into a device row store mirroring ``ScopeRows`` with
+            owned/scattered flags and amortized doubling (build / sort),
+            or a capacity-bounded probe expansion emitting each record
+            ``match_count`` times as a padded masked DeviceChunk
+            (HashJoinProbe; the build side is a dense [W, K] match-count
+            table summing owned + scattered rows).  The host reads back
+            only O(num_workers) control metrics per dispatch and
+            materializes state at the boundaries
+            ``Engine._fusible_ticks`` already computes (sink snapshots,
+            controller metric rounds, checkpoints, END, rewrites).
+            Consecutive jit edges whose RoutingTables are provably
+            routing-equivalent (``RoutingTable.routing_token``: one-hot
+            tables over the same key space with identical
             primaries/owners) additionally fuse into a *chain*: the
-            whole Filter/Project → … → GroupBy/Sink run advances in one
-            dispatch per super-tick sharing the head edge's placement,
-            falling back per-edge the moment a rewrite voids the token
+            whole Filter/Project/Probe → … → GroupBy/Sink/Build/Sort
+            run advances in one dispatch per super-tick sharing the
+            head edge's placement (a probe chains like a map stage — it
+            repeats records without re-keying), falling back per-edge
+            the moment a rewrite voids the token
             (``Engine(device_chain=False)`` / ``REPRO_DEVICE_CHAIN=0``
             disables).  On TPU the partition core is the fused Pallas
             :func:`repro.kernels.partition.partition_scatter` /
@@ -70,10 +82,12 @@ Backends
             through XLA/interpret for correctness runs, ``"host"`` — the
             off-TPU default — executes the identical canonical rule via
             the fused numpy exchange, which the backend-equivalence
-            suite proves bit-identical).  Ineligible edges fall back to
-            this per-chunk :class:`PallasPartitionBackend`, whose
-            ``partition_scatter`` kernel emits each record's
-            within-destination rank so the host does no sort.
+            suite proves bit-identical).  Ineligible edges — a second
+            upstream, 2-D payloads, a probe whose worst-case fanout
+            would blow the emit buffer — fall back to this per-chunk
+            :class:`PallasPartitionBackend`, whose ``partition_scatter``
+            kernel emits each record's within-destination rank so the
+            host does no sort.
 
 Both planes route through the same per-key counters owned by the edge's
 ``RoutingTable`` (device-resident counters are materialized on demand via

@@ -355,6 +355,7 @@ class _RowStateOp(Operator):
         return 1
 
     def state_units(self, wid: int, mode: TransferMode) -> float:
+        self._device_sync()
         st = self.workers[wid].state
         if isinstance(st, ScopeRows):
             return float(st.total_rows())
@@ -374,6 +375,7 @@ class _RowStateOp(Operator):
 
     def merge_scattered(self) -> int:
         """Ship scattered row buffers to their scope owners (§5.4)."""
+        self._device_sync()
         moved = 0
         for w in self.workers:
             scat = w.scattered
@@ -384,6 +386,8 @@ class _RowStateOp(Operator):
                          if self.owner_of is not None else w)
                 moved += owner.state.extend_from(scat, int(k))
             scat.clear()
+        if moved:
+            self._device_stale()
         return moved
 
 
@@ -413,20 +417,40 @@ class HashJoinProbe(_RowStateOp):
         )
 
     def install_build(self, routing, build_keys: np.ndarray, build_vals: np.ndarray) -> None:
-        """Partition the build table by the current routing owner."""
+        """Partition the build table by the current routing owner.
+
+        Routed through the exchange's fused counting-scatter placement
+        (one stable grouping pass + one contiguous slice per receiving
+        worker) instead of a per-unique-worker boolean-mask loop — the
+        same ``ScatterPlan`` shape every edge send uses.
+        """
+        from .exchange import ScatterPlan, _bounds_of, scatter_order
+        # Mid-run installs mutate host keyed state: materialize the
+        # device copy first (the migrate_state/merge_scattered pattern),
+        # else the post-install reload would rebuild rings from a stale
+        # host snapshot and drop device-resident backlog.
+        self._device_sync()
         bk = np.asarray(build_keys, dtype=np.int64)
         bv = np.asarray(build_vals, dtype=np.float64)
         self.ensure_key_stats(routing.num_keys)
         dest = routing.owner[bk]
-        for w in np.unique(dest):
-            m = dest == w
-            self.workers[int(w)].state.extend_segments(bk[m], bv[m])
+        hist = np.bincount(dest, minlength=self.num_workers)
+        plan = ScatterPlan(dest, hist, _bounds_of(hist),
+                           order=scatter_order(dest, hist))
+        gk, gv = plan.take(bk), plan.take(bv)
+        for w in np.flatnonzero(hist):
+            a, b = int(plan.bounds[w]), int(plan.bounds[w + 1])
+            self.workers[int(w)].state.extend_segments(gk[a:b], gv[a:b])
+        self._device_stale()
 
     def process(self, worker, keys, vals):
+        # A split build key can hold rows in *both* the owned table and
+        # `scattered` (SBR ships later build rows to helpers without
+        # merging); match multiplicity is the SUM of both row sets — a
+        # present-mask select would drop whichever side it didn't pick.
         matches = worker.state.counts_of(keys)
         if len(worker.scattered):
-            matches = np.where(worker.state.present[keys], matches,
-                               worker.scattered.counts_of(keys))
+            matches = matches + worker.scattered.counts_of(keys)
         # Emit one tuple per (probe tuple x build match); join payload is
         # the probe val (enough for count/sum analytics downstream).
         out_keys = np.repeat(keys, matches)
@@ -568,11 +592,20 @@ class RangeSort(_RowStateOp):
         return outs
 
     def sorted_output(self) -> np.ndarray:
-        """Globally sorted values: ranges in order, each locally sorted."""
+        """Globally sorted values: ranges in order, each locally sorted.
+
+        Valid mid-run too: un-merged *scattered* buffers (an active SBR
+        split parks a range's overflow rows on helper workers until the
+        END merge) are folded in, so an exploratory query during a
+        mitigation sees every received record, not just owner-resident
+        ones.  Device-resident state is materialized first.
+        """
+        self._device_sync()
         per_range: Dict[int, List[np.ndarray]] = {}
         for w in self.workers:
-            for k, parts in w.state.items():
-                per_range.setdefault(int(k), []).extend(parts)
+            for table in (w.state, w.scattered):
+                for k, parts in table.items():
+                    per_range.setdefault(int(k), []).extend(parts)
         out = []
         for k in sorted(per_range):
             out.append(np.sort(np.concatenate(per_range[k])))

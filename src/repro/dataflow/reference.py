@@ -63,8 +63,10 @@ class RefHashJoinProbe(HashJoinProbe):
             self.workers[w].state.setdefault(int(k), []).append(float(v))
 
     def process(self, worker, keys, vals):
+        # Sum owned + scattered rows (a split build key may hold both).
         matches = np.array(
-            [len(worker.state.get(int(k), worker.scattered.get(int(k), ())))
+            [len(worker.state.get(int(k), ()))
+             + len(worker.scattered.get(int(k), ()))
              for k in keys],
             dtype=np.int64,
         )
@@ -197,8 +199,9 @@ class RefRangeSort(RangeSort):
     def sorted_output(self) -> np.ndarray:
         per_range: Dict[int, List[np.ndarray]] = {}
         for w in self.workers:
-            for k, parts in w.state.items():
-                per_range.setdefault(k, []).extend(parts)
+            for table in (w.state, w.scattered):   # mid-run: fold splits in
+                for k, parts in table.items():
+                    per_range.setdefault(k, []).extend(parts)
         out = []
         for k in sorted(per_range):
             out.append(np.sort(np.concatenate(per_range[k])))

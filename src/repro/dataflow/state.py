@@ -207,6 +207,20 @@ class ScopeRows:
                 rows[offsets[k]:offsets[k + 1]] = np.concatenate(parts)
         return offsets, rows
 
+    def export_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Keyed row export: (keys [total_rows], rows [total_rows]).
+
+        Rows come out grouped by scope in ascending scope order with each
+        scope's rows in arrival order — exactly the layout the device
+        exchange plane uploads into its flat per-worker segment store,
+        chosen so that a later regroup by key (stable) reproduces every
+        scope array bit-for-bit (:meth:`extend_segments` is the inverse).
+        """
+        offsets, rows = self.freeze()
+        keys = np.repeat(np.arange(self.counts.size, dtype=np.int64),
+                         self.counts)
+        return keys, rows
+
     def clear(self) -> None:
         self.counts[:] = 0
         self.present[:] = False

@@ -77,6 +77,21 @@ def partition_scatter_fold(keys, counters, vals, weights, valid=None,
                                         interpret=_default_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("emit_width",))
+def match_expand(wk, wv, wmask, mcounts, *, emit_width: int):
+    """Hash-join probe expansion of a ``[W, B]`` pop window.
+
+    Each live lane is repeated ``mcounts[w, key]`` times (owned +
+    scattered build rows) into a padded, masked ``[W, emit_width]``
+    output — the device plane's probe-expand step, exposed standalone
+    for oracle tests and ad-hoc use.  Pure jnp (gather + vmapped binary
+    search; no Pallas kernel: the expansion is memory-bound indexing
+    with no reduction to fuse).
+    """
+    from . import ref as _ref
+    return _ref.match_expand(wk, wv, wmask, mcounts, emit_width)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
 def segment_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
                    block_k: int = 128):

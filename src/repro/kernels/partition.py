@@ -15,6 +15,11 @@ device-resident exchange plane (:mod:`repro.dataflow.device`): the same
 pass also accumulates the downstream GroupByAgg bincount fold (per-key
 record counts + val sums) in VMEM scratch, with a validity mask so the
 plane's padded, masked chunks never perturb ranks, histogram or fold.
+The row-state edges of that plane (HashJoinBuild / RangeSort ingests
+under ``device_use_kernel=True``) reuse the same kernel: dest/rank/hist
+drive the ring scatter and the per-key count column doubles as the
+chunk's key-arrival stats fold, so a monitored build/sort edge pays no
+separate stats pass.
 
 TPU adaptation of a hash-exchange: instead of per-tuple pointer chasing,
 destinations come from an inverse-CDF lookup (records x workers compare —

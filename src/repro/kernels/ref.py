@@ -125,6 +125,42 @@ def partition_scatter_fold(keys: jnp.ndarray, counters: jnp.ndarray,
     return dest, rank * lanes, hist, cnt, sm
 
 
+def match_expand(wk: jnp.ndarray, wv: jnp.ndarray, wmask: jnp.ndarray,
+                 mcounts: jnp.ndarray, emit_width: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded hash-join probe expansion of a popped window.
+
+    ``wk`` / ``wv`` / ``wmask``: a ``[W, B]`` padded pop window (the
+    device exchange plane's per-worker budgeted pop); ``mcounts``: the
+    dense ``[W, K]`` per-(worker, key) build-match table (owned +
+    scattered row counts summed).  Each live lane ``(k, v)`` on worker
+    ``w`` is emitted ``mcounts[w, k]`` times into a padded ``[W,
+    emit_width]`` output, lanes in stream order with a lane's copies
+    contiguous — the jnp twin of ``np.repeat(keys, matches)`` /
+    ``np.repeat(vals, matches)`` per worker.  The per-output-slot source
+    lane comes from a vmapped binary search over the row-wise inclusive
+    fanout cumsum (slot *j* belongs to the first lane whose cumsum
+    exceeds *j*), so no ``[W, E, B]`` comparison tensor is materialized.
+
+    ``emit_width`` must bound the worst-case fanout (``B * max(mcounts)``
+    — the device plane sizes it exactly so); output slots past the true
+    total are masked dead.  Returns ``(out_keys [W, E], out_vals [W, E],
+    keep [W, E])``.
+    """
+    W, B = wk.shape
+    m = jnp.where(wmask, mcounts[jnp.arange(W)[:, None], wk], 0)
+    csum = jnp.cumsum(m, axis=1)                       # [W, B] inclusive
+    total = csum[:, -1]
+    iot = jnp.arange(emit_width, dtype=csum.dtype)
+    src = jax.vmap(
+        lambda c: jnp.searchsorted(c, iot, side="right"))(csum)
+    src = jnp.minimum(src, B - 1)
+    keep = iot[None, :] < total[:, None]
+    out_keys = jnp.take_along_axis(wk, src, axis=1)
+    out_vals = jnp.take_along_axis(wv, src, axis=1)
+    return out_keys, out_vals, keep
+
+
 def segment_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped expert matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),

@@ -56,6 +56,17 @@ def test_bench_smoke_all_registered(tmp_path):
         chain["chain_fpg_jit_unfused"]["placements_per_supertick"]
     assert all(r["plane"] == "device-jit" for m, r in chain.items()
                if not m.endswith("_numpy"))
+    # row-state rows (PR 5): join/sort on the device plane, every variant
+    # present, and the probe chain fusion's placement drop (F→Probe: 2→1)
+    rowstate = {r["mode"]: r for r in rows
+                if r["mode"].startswith(("join_", "sort_"))}
+    for name in ("join", "sort"):
+        assert {f"{name}_reference", f"{name}_numpy", f"{name}_pallas",
+                f"{name}_pallas_chunk", f"{name}_jit"} <= set(rowstate)
+    assert rowstate["join_jit"]["placements_per_supertick"] < \
+        rowstate["join_jit_unfused"]["placements_per_supertick"]
+    assert all(r["plane"] == "device-jit" for m, r in rowstate.items()
+               if m.endswith(("_jit", "_jit_unfused")))
     after = os.path.getmtime(os.path.join(REPO,
                                           "BENCH_engine_throughput.json"))
     assert before == after

@@ -143,9 +143,11 @@ class TestJitPlaneEquivalence:
             np.testing.assert_array_equal(wa.state.counts, wb.state.counts)
             assert not len(wb.scattered)        # merged at END
 
-    def test_w1_mixed_plane_matches_numpy(self):
-        """W1: device filter + sink edges around a host pallas join edge
-        — planes compose, run stays bit-identical."""
+    def test_w1_full_device_plane_matches_numpy(self):
+        """W1 under reshape: since the row-state operator set landed,
+        *every* edge — filter, the monitored HashJoinProbe, sink — runs
+        device-jit, and the run stays bit-identical to numpy through
+        detections, phase-1/2 rewrites and migrations."""
         from repro.dataflow import build_w1
         kw = dict(strategy="reshape", scale=0.005, num_workers=6,
                   service_rate=4, batch_ticks=4, snapshot_every=2)
@@ -154,7 +156,7 @@ class TestJitPlaneEquivalence:
         b = build_w1(partition_backend="pallas", device_executor="jit", **kw)
         b.run()
         planes = [e.device_plane for e in b.engine.edges]
-        assert planes == ["jit", None, "jit"]   # join edge stays per-chunk
+        assert planes == ["jit", "jit", "jit"]   # join edge included now
         assert a.engine.tick == b.engine.tick
         assert _series_equal(a.sink.series, b.sink.series)
         for ea, eb in zip(a.engine.edges, b.engine.edges):

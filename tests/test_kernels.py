@@ -190,6 +190,41 @@ def test_partition_scatter_fold_matches_oracle(n_keys, n_workers, seed):
     assert int(np.asarray(h1).sum()) == int(m.sum())
 
 
+@given(
+    n_keys=st.integers(2, 24),
+    n_workers=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_match_expand_matches_numpy_repeat(n_keys, n_workers, seed):
+    """Probe-expand oracle: each live lane of a [W, B] pop window emitted
+    mcounts[w, key] times, lane order, copies contiguous — per worker
+    exactly ``np.repeat(keys, matches)`` / ``np.repeat(vals, matches)``
+    (the host plane's HashJoinProbe.process)."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 40))
+    wk = rng.integers(0, n_keys, (n_workers, B))
+    wv = rng.uniform(0.0, 8.0, (n_workers, B))
+    wmask = rng.random((n_workers, B)) < 0.8
+    mcounts = rng.integers(0, 4, (n_workers, n_keys))
+    E = int(B * max(int(mcounts.max()), 1))
+    ok, ov, keep = ops.match_expand(
+        jnp.asarray(wk), jnp.asarray(wv), jnp.asarray(wmask),
+        jnp.asarray(mcounts), emit_width=E)
+    for w in range(n_workers):
+        ks, vs = wk[w][wmask[w]], wv[w][wmask[w]]
+        matches = mcounts[w][ks]
+        want_k = np.repeat(ks, matches)
+        want_v = np.repeat(vs, matches)
+        got = np.asarray(keep[w])
+        assert int(got.sum()) == want_k.size
+        np.testing.assert_array_equal(np.asarray(ok[w])[got], want_k)
+        np.testing.assert_allclose(np.asarray(ov[w])[got], want_v)
+        # the live prefix is dense (padding strictly trails), so copies
+        # are contiguous and in lane (stream) order
+        assert got[:want_k.size].all()
+
+
 # --------------------------------------------------------------------- #
 # segment matmul
 # --------------------------------------------------------------------- #
