@@ -159,6 +159,72 @@ def _run_one(n_tuples, num_workers, chunk, *, reps=3, **kw):
                        **kw)
 
 
+def _build_monitored(n_tuples, num_workers, chunk, *, backend=None,
+                     batch_ticks=BATCH, device_executor=None,
+                     device_controller=None):
+    """Source -> GroupByAgg (monitored at a per-tick metric cadence) ->
+    Sink; the SCATTERED-eligible shape the in-dispatch controller arms
+    on.  ``snapshot_every=0`` so the metric grid is the only span cut."""
+    from repro.core import ReshapeConfig
+    keys, vals = _stream(n_tuples)
+    eng = Engine(partition_backend=backend, batch_ticks=batch_ticks,
+                 device_executor=device_executor,
+                 device_controller=device_controller)
+    src = eng.add_source(Source("zipf", keys, vals, num_workers * chunk))
+    grp = eng.add_op(GroupByAgg("groupby", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", NUM_KEYS, snapshot_every=0))
+    eng.connect(src, grp, NUM_KEYS)
+    eng.connect(grp, sink, NUM_KEYS)
+    eng.attach_controller(grp, ReshapeConfig(metric_period=1))
+    return eng, sink
+
+
+def _run_monitored(n_tuples, num_workers, chunk, *, reps=3, **kw):
+    best = 0.0
+    for _ in range(reps):
+        eng, sink = _build_monitored(n_tuples, num_workers, chunk, **kw)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        best = max(best, n_tuples / max(dt, 1e-9))
+    span = round(eng.tick / max(eng.super_ticks, 1), 2)
+    return best, sink, span
+
+
+def _monitored_rows():
+    """Monitored-workflow rows (PR 6): per-tick metric cadence under the
+    forced-jit device plane.  Host-stepped (``ctrl_jit``) every metric
+    round is a super-tick boundary, so ``ticks_per_supertick`` collapses
+    to ~1; armed (``ctrl_jit_armed``) the rounds run inside the fused
+    dispatch and spans run to the full BATCH horizon — with sink counts
+    (and controller decisions) bit-identical across all three rows."""
+    shapes = common.smoke([(16, 512, 40_000)], [(4, 64, 1_500)])
+    rows = []
+    for num_workers, chunk, n in shapes:
+        variants = [
+            ("ctrl_numpy", dict(backend="numpy")),
+            ("ctrl_jit", dict(backend="pallas", device_executor="jit")),
+            ("ctrl_jit_armed", dict(backend="pallas",
+                                    device_executor="jit",
+                                    device_controller=True)),
+        ]
+        oracle = None
+        for mode, opts in variants:
+            try:
+                tps, sink, span = _run_monitored(n, num_workers, chunk,
+                                                 **opts)
+            except ImportError:
+                continue            # container without jax
+            if oracle is None:
+                oracle = sink.counts.copy()
+            else:
+                assert np.array_equal(sink.counts, oracle), mode
+            rows.append(dict(mode=mode, n_tuples=n, workers=num_workers,
+                             chunk=chunk, tuples_per_sec=round(tps),
+                             ticks_per_supertick=span))
+    return rows
+
+
 class _PerChunkProbe(HashJoinProbe):
     """Deliberate subclass: ``device.wireable`` is exact-type (a subclass
     may override ``process``), so this keeps the probe edge on the
@@ -317,9 +383,9 @@ def _plane_of(mode: str) -> str:
         if mode.endswith("_pallas"):
             return _plane_of("pallas")  # auto executor: jit / host twin
         return "device-jit"             # *_jit, *_jit_unfused
-    if mode.startswith("chain_") and mode.endswith("_numpy"):
+    if mode.startswith(("chain_", "ctrl_")) and mode.endswith("_numpy"):
         return "host-fused"
-    if mode.startswith("chain_"):
+    if mode.startswith(("chain_", "ctrl_")):
         return "device-jit"
     if mode == "pallas_jit":
         return "device-jit"
@@ -422,9 +488,11 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
     if include_pallas:
         rows += _chain_rows(common.smoke(40_000, 2_000))
         rows += _rowstate_rows()
+        rows += _monitored_rows()
     emit("engine_throughput", rows,
          ["mode", "workers", "chunk", "tuples_per_sec",
-          "speedup_vs_reference", "placements_per_supertick"],
+          "speedup_vs_reference", "placements_per_supertick",
+          "ticks_per_supertick"],
          size=dict(n_tuples=n_tuples), prov=prov)
     # Perf trajectory for future PRs to diff against (provenance-stamped).
     # Smoke mode validates the JSON contract against a side path so the
@@ -435,7 +503,8 @@ def run(n_tuples: int = 200_000, include_pallas: bool = True) -> None:
     with open(json_path, "w") as f:
         json.dump([dict({k: r[k] for k in
                          ("mode", "n_tuples", "workers", "chunk",
-                          "tuples_per_sec", "placements_per_supertick")
+                          "tuples_per_sec", "placements_per_supertick",
+                          "ticks_per_supertick")
                          if k in r},
                         plane=_plane_of(r["mode"]), **prov)
                    for r in rows], f, indent=1)

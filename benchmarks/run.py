@@ -76,6 +76,23 @@ def _smoke_check(name: str) -> str:
                 "git_sha", "jax_backend", "timestamp"}
         if not data or not all(need <= set(r) for r in data):
             return f"{name}: perf JSON rows missing fields {need}"
+    if name == "control_latency":
+        # the mitigation-latency pair (PR 6) lands in its own table;
+        # required whenever the container has jax (the bench emits it
+        # only when the device plane is importable)
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return ""
+        mpath = os.path.join(common.RESULTS_DIR,
+                             "control_latency_mitigation.smoke.csv")
+        if not os.path.exists(mpath):
+            return f"{name}: no mitigation table at {mpath}"
+        with open(mpath, newline="") as f:
+            mrows = list(csv.DictReader(f))
+        if not mrows or not {"batch_ticks", "plane",
+                             "latency_ticks"} <= set(mrows[0]):
+            return f"{name}: mitigation table empty or missing columns"
     return ""
 
 

@@ -119,6 +119,13 @@ class ReshapeController:
         self.iterations_total = 0
         self._pending: List[_PendingUpdate] = []
         self._tick = -1
+        #: metric rounds executed in-dispatch by a device-resident twin
+        #: (no per-round O(W) host metric messages for those rounds).
+        self.rounds_on_device = 0
+        #: boundary readbacks on the device plane: each ``sync_stats``
+        #: drain that feeds this controller is one O(W) transfer and is
+        #: accounted like a metric-collection round.
+        self.sync_readbacks = 0
         # Resolve the transfer mode once, at "workflow compile time" (§3.1).
         self.mode = choose_mode(adapter.traits, self.cfg.mode)
         self.strategy = choose_strategy(adapter.traits, self.mode)
@@ -152,11 +159,20 @@ class ReshapeController:
         self._detect(tick)
 
     def metric_messages(self) -> int:
-        """Metric-collection traffic so far (for the §7.9 overhead study)."""
-        return self.adapter.num_workers * max(
+        """Metric-collection traffic so far (for the §7.9 overhead study).
+
+        Host plane: one O(W) message set per metric round.  Device plane:
+        a metric round that drains ``sync_stats()`` is one O(W) readback,
+        not free — each boundary drain counts like a round
+        (``sync_readbacks``), while rounds the device-resident controller
+        ran entirely in-dispatch (``rounds_on_device``) cost no host
+        traffic and are subtracted."""
+        rounds = max(
             0,
             (self._tick - self.cfg.initial_delay_ticks) // self.cfg.metric_period + 1,
         )
+        host_rounds = max(0, rounds - self.rounds_on_device)
+        return self.adapter.num_workers * (host_rounds + self.sync_readbacks)
 
     # ------------------------------------------------------------------ #
     # Control-message queue (models §7.5 latency)                         #

@@ -14,9 +14,26 @@ from __future__ import annotations
 
 import collections
 import math
-from typing import Deque, Sequence, Tuple
+from typing import Deque, Iterable, Sequence, Tuple
 
 import numpy as np
+
+
+def seq_sum(values: Iterable[float]) -> float:
+    """Canonical strictly-sequential (left-to-right) float64 sum.
+
+    Every statistic the controller's decisions depend on — the sample
+    mean, the standard error, the predicted-share normalizer — funnels
+    through this one reduction so the device-resident controller twin
+    (:mod:`repro.dataflow.device`) can replicate it bit-for-bit with a
+    fixed-order masked accumulation.  ``np.sum``/``np.mean`` use pairwise
+    blocking, which XLA cannot be forced to reproduce; a plain sequential
+    chain of IEEE-754 adds can.
+    """
+    acc = 0.0
+    for v in values:
+        acc += float(v)
+    return acc
 
 
 class MeanModelEstimator:
@@ -44,21 +61,28 @@ class MeanModelEstimator:
         return len(self._obs)
 
     def predict(self) -> float:
-        """Predicted future per-tick workload (the sample mean)."""
+        """Predicted future per-tick workload (the sample mean).
+
+        Computed with the canonical sequential sum (:func:`seq_sum`) so
+        the device-resident controller reproduces it bit-for-bit.
+        """
         if not self._obs:
             return 0.0
-        return float(np.mean(self._obs))
+        return seq_sum(self._obs) / len(self._obs)
 
     def stderr(self) -> float:
         """Standard error of prediction, eps = d*sqrt(1+1/n).
 
         Returns +inf with fewer than two observations: an empty sample
-        cannot justify a phase-2 split.
+        cannot justify a phase-2 split.  Uses the same sequential
+        mean / sum-of-squared-deviations order as the device twin.
         """
-        if len(self._obs) < 2:
-            return float("inf")
-        d = float(np.std(self._obs, ddof=1))
         n = len(self._obs)
+        if n < 2:
+            return float("inf")
+        mean = seq_sum(self._obs) / n
+        ssq = seq_sum((v - mean) * (v - mean) for v in self._obs)
+        d = math.sqrt(ssq / (n - 1))
         return d * math.sqrt(1.0 + 1.0 / n)
 
 
@@ -96,7 +120,7 @@ class WorkloadTracker:
             raise ValueError("metric vectors must have one entry per worker")
         self.phi = phi
         self.received_total += arrived
-        total = arrived.sum()
+        total = seq_sum(arrived)
         if total > 0:
             scaled = arrived * (self.horizon / total)
             for est, a in zip(self._estimators, scaled):
@@ -112,7 +136,7 @@ class WorkloadTracker:
     def predicted_shares(self) -> np.ndarray:
         """f_hat_w: predicted fraction of the operator's future input."""
         rates = self.predicted_rates()
-        total = rates.sum()
+        total = seq_sum(rates)
         if total <= 0:
             return np.full(self.num_workers, 1.0 / self.num_workers)
         return rates / total

@@ -152,6 +152,14 @@ def snapshot(engine: Engine) -> Dict:
 
 def restore(engine: Engine, snap: Dict) -> None:
     """Recovery: restore states from the checkpoint and continue (§2.2)."""
+    # Reconcile armed device-resident controllers first: the host event
+    # log and tick mirror lag in-dispatch decisions until a boundary
+    # drain, and ``_restore_controller`` truncates the *live* event list
+    # to the snapshot's length — draining makes it live before the cut.
+    for att in engine.controllers:
+        dev = att.op.device
+        if dev is not None and dev.ctrl is not None and dev.ctrl.active:
+            dev.ctrl.drain()
     engine.tick = snap["tick"]
     engine.state_units_moved = snap["state_units_moved"]
     for s, ss in zip(engine.sources, snap["sources"]):

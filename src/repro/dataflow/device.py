@@ -99,6 +99,51 @@ fusion while every stage keeps its exact host mirrors.  Chains require
 every non-tail map stage to preserve keys: Filter does by construction;
 Project must declare ``preserves_keys=True``.
 
+The control plane (device-resident skew controller)
+---------------------------------------------------
+With ``Engine(device_controller=True)`` / ``REPRO_DEVICE_CONTROLLER=1``
+an attached :class:`~repro.core.controller.ReshapeController` is *armed*
+onto its monitored edge (:class:`DeviceController`): per-key arrival
+stats, the workload tracker, the skew test, helper choice and the
+phase-1 / phase-2 split-ratio math are compiled into a ``ctrl_step``
+that runs **inside the fused dispatch plane** — all metric rounds a
+super-tick covers execute in one jitted call, and a detection rewrites
+the routing constants (cdf32 / primary / split mask / owner) as device
+arrays with a bumped device-side epoch, so the very next window
+dispatches rebalanced without a host boundary.  The host controller
+stays the **bit-exact twin and arbitration point**: each round's
+observation window (phi, owner-attributed arrivals) is logged on
+device, and at the next boundary :meth:`DeviceController.drain` replays
+those windows through the untouched host ``ReshapeController`` — events,
+tau trajectory, mitigation phases and the routing table must reproduce
+the device's decisions exactly (on any mismatch the host wins, with a
+``RuntimeWarning`` and a re-upload), which keeps the host path the A/B
+oracle and checkpoints host-authoritative.
+
+Only decisions expressible without state migration run in-dispatch:
+eligibility (``DeviceController.ineligible_reason``) requires SBR +
+SCATTERED (GroupByAgg / RangeSort traits), a single helper, zero
+control delay, full phase-1 partitions, unbounded migration rate and no
+pinned helpers — MARKERS / REPLICATE operators (HashJoinProbe) and
+multi-helper or delayed-control configs refuse up front and stay
+host-stepped.  An armed controller *demotes* back to host stepping the
+moment device-held state stops being authoritative: a host-side state
+mutation (scattered-state merge at END, ``mark_state_stale``), an
+out-of-band routing rewrite (another writer bumping ``table.version``),
+or a checkpoint restore carrying mitigation state the jit twin cannot
+represent (anything outside PHASE_ONE / PHASE_TWO, or pending delayed
+messages) — each drains first, so no decision is lost.
+
+Epoch rules vs ``routing_token``: in-dispatch rewrites advance a
+device-side epoch ahead of the host table's ``version``; while the two
+disagree (``routing_dirty``) the runtime's ``_live_token()`` returns
+``None``, so chain fusion and the placement-epoch reuse guard treat the
+table as unprovable until a drain reconciles ``version``/consts — a
+fused chain therefore can never dispatch under a stale proof of routing
+equivalence.  Scheduling: :meth:`Engine._fusible_ticks` stops cutting
+windows at metric rounds for armed edges (rounds no longer need a host
+boundary), so monitored workflows keep full-width fused spans.
+
 Executors
 ---------
 ``jit``   the real device plane as described above.  Default on TPU;
@@ -640,7 +685,8 @@ def _step_for(kind: str):
                              "project": _make_step_map,
                              "probe": _make_step_map,
                              "sink": _make_step_sink,
-                             "chain": _make_step_chain}[kind]()
+                             "chain": _make_step_chain,
+                             "ctrl": _make_ctrl_step}[kind]()
     return _STEP_CACHE[kind]
 
 
@@ -649,6 +695,644 @@ def _pow2(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+# --------------------------------------------------------------------- #
+# The device-resident skew controller (in-dispatch control plane)         #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CtrlSpec:
+    """Static half of the jitted controller step (hashable; a changed
+    spec retraces once, like :class:`StepSpec` for the data plane)."""
+
+    W: int                     # workers
+    K: int                     # key space
+    window: int                # estimator sample window
+    R: int                     # observation-log capacity (windows)
+    KMAX: int                  # widest covered window (tick-loop bound)
+    eta: float
+    metric_period: int
+    initial_delay: int
+    adaptive_tau: bool
+    eps_lower: float
+    eps_upper: float
+    tau_increase: float
+    max_tau_adjustments: int
+    catchup_tolerance: float
+    retire_window: int         # 0 = never retire
+    enable_phase1: bool
+    horizon: float             # tracker prediction horizon (tuples)
+
+
+def _make_ctrl_step():
+    """Build the jitted ``controller_step``.
+
+    One call covers one super-tick window ``[t0, t0+k)``: for every
+    metric round inside it, replay the host controller's exact round —
+    tracker update, mitigation state machine, adaptive tau, detection,
+    and the phase-1/phase-2 routing rewrites — against the device-held
+    controller state, bumping ``epoch`` whenever the weights changed and
+    rebuilding the routing consts once at the end.  Every float
+    reduction goes through the canonical sequential order
+    (:func:`repro.core.estimator.seq_sum` / ``kernels.ref.seq_sum_vec``)
+    so decisions are bit-identical to :class:`ReshapeController`.
+    """
+    import jax
+    jnp = _jnp()
+    from ..kernels import ref as kref
+
+    PH1 = 2                    # MitigationPhase.PHASE_ONE.value
+    PH2 = 3                    # MitigationPhase.PHASE_TWO.value
+
+    @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+    def ctrl_step(cs: CtrlSpec, c, arrived, phi, t0, k, tuples_left, rate):
+        i32 = jnp.int32
+        W = cs.W
+        idx = jnp.arange(W)
+        BIG = jnp.iinfo(jnp.int32).max
+
+        def est_stats(c, w):
+            return kref.ring_mean_stderr(
+                c["obs"][w], c["obs_n"][w], c["obs_pos"][w])
+
+        def predicted_shares(c):
+            means, _ = jax.vmap(kref.ring_mean_stderr)(
+                c["obs"], c["obs_n"], c["obs_pos"])
+            total = kref.seq_sum_vec(means)
+            return jnp.where(total <= 0, 1.0 / W,
+                             means / jnp.where(total <= 0, 1.0, total))
+
+        def apply_phase1(c, s, h):
+            # plan_phase1 (full partition): every key owned by S with any
+            # S-mass hands that mass to H (row sums preserved).
+            w = c["weights"]
+            col_s = w[:, s]
+            col_h = w[:, h]
+            sel = (c["owner"] == s.astype(c["owner"].dtype)) & (col_s > 0.0)
+            new_w = (w.at[:, h].set(jnp.where(sel, col_h + col_s, col_h))
+                      .at[:, s].set(jnp.where(sel, 0.0, col_s)))
+            return new_w, jnp.any(sel)
+
+        def apply_phase2(c, s, h):
+            # plan_phase2 (SBR, single helper): every key owned by S gets
+            # the same fresh row [S: 1-r, H: r] from the predicted shares.
+            shares = predicted_shares(c)
+            r = kref.phase2_fraction(shares[s], shares[h])
+            row = (jnp.zeros(W, c["weights"].dtype)
+                   .at[s].set(1.0 - r).at[h].add(r))
+            owned = c["owner"] == s.astype(c["owner"].dtype)
+            new_w = jnp.where(owned[:, None], row[None, :], c["weights"])
+            return new_w, jnp.any(owned)
+
+        def round_fn(st):
+            c, arr = st
+            # ---- tracker.update (one metric round) ---------------------
+            total = kref.seq_sum_vec(arr)
+            has = total > 0
+            scale = cs.horizon / jnp.where(has, total, 1.0)
+            obs = jnp.where(has,
+                            c["obs"].at[idx, c["obs_pos"]].set(arr * scale),
+                            c["obs"])
+            obs_n = jnp.where(has,
+                              jnp.minimum(c["obs_n"] + 1, cs.window),
+                              c["obs_n"])
+            obs_pos = jnp.where(has, (c["obs_pos"] + 1) % cs.window,
+                                c["obs_pos"])
+            c = dict(c, obs=obs, obs_n=obs_n, obs_pos=obs_pos)
+            arr = jnp.zeros_like(arr)   # the adapter drains every round
+
+            # ---- _advance_mitigations (insertion order == seq order) ---
+            def adv_body(_, st):
+                c, processed = st
+                seqs = jnp.where(c["mit_active"] & ~processed,
+                                 c["mit_seq"], BIG)
+                s = jnp.argmin(seqs)
+                have = seqs[s] < BIG
+                h = c["mit_helper"][s]
+                phase = c["mit_phase"][s]
+                q_s = phi[s]
+                q_h = phi[h]
+                top = jnp.maximum(jnp.maximum(q_s, q_h), 1.0)
+                p1_to_p2 = (have & (phase == PH1)
+                            & (q_h >= q_s - cs.catchup_tolerance * top))
+                in_p2 = have & (phase == PH2)
+                s_ahead = (q_s >= cs.eta) & (q_s - q_h >= c["tau"])
+                h_ahead = (q_h >= cs.eta) & (q_h - q_s >= c["tau"])
+                calm = in_p2 & ~(s_ahead | h_ahead)
+                new_calm = c["mit_calm"][s] + 1
+                retire = (calm & (cs.retire_window > 0)
+                          & (new_calm >= cs.retire_window))
+                div = in_p2 & (s_ahead | h_ahead)
+                # adaptive tau on divergence (eps BEFORE the resets)
+                _, e_s = est_stats(c, s)
+                _, e_h = est_stats(c, h)
+                eps = jnp.maximum(e_s, e_h)
+                inc = (div & cs.adaptive_tau & jnp.isfinite(eps)
+                       & (eps > cs.eps_upper)
+                       & (c["tau_adj"] < cs.max_tau_adjustments))
+                c = dict(c,
+                         tau=jnp.where(inc, c["tau"] + cs.tau_increase,
+                                       c["tau"]),
+                         tau_adj=c["tau_adj"] + inc.astype(i32))
+                # reset_samples([s, h]) on a new iteration
+                obs_n2 = c["obs_n"].at[s].set(
+                    jnp.where(div, 0, c["obs_n"][s]))
+                obs_n2 = obs_n2.at[h].set(jnp.where(div, 0, obs_n2[h]))
+                c = dict(c, obs_n=obs_n2)
+                start_p1 = div & s_ahead
+                start_p2 = (div & ~s_ahead) | p1_to_p2
+                if not cs.enable_phase1:
+                    start_p2 = start_p2 | start_p1
+                    start_p1 = jnp.zeros_like(start_p1)
+                w1, ch1 = apply_phase1(c, s, h)
+                w2, ch2 = apply_phase2(c, s, h)   # post-reset shares
+                new_w = jnp.where(start_p1, w1,
+                                  jnp.where(start_p2, w2, c["weights"]))
+                bumped = (start_p1 & ch1) | (start_p2 & ch2)
+                c = dict(
+                    c,
+                    weights=new_w,
+                    epoch=c["epoch"] + bumped.astype(i32),
+                    mit_phase=c["mit_phase"].at[s].set(
+                        jnp.where(start_p1, i32(PH1),
+                                  jnp.where(start_p2, i32(PH2),
+                                            c["mit_phase"][s]))),
+                    mit_calm=c["mit_calm"].at[s].set(
+                        jnp.where(calm, new_calm.astype(i32),
+                                  jnp.where(div, i32(0),
+                                            c["mit_calm"][s]))),
+                    mit_active=c["mit_active"].at[s].set(
+                        c["mit_active"][s] & ~retire),
+                )
+                processed = processed.at[s].set(processed[s] | have)
+                return c, processed
+
+            c, _ = jax.lax.fori_loop(0, W, adv_body,
+                                     (c, jnp.zeros(W, bool)))
+
+            # ---- _detect ----------------------------------------------
+            helper_busy = (jnp.zeros(W, i32).at[c["mit_helper"]]
+                           .add(c["mit_active"].astype(i32))) > 0
+            busy = c["mit_active"] | helper_busy
+            free = ~busy
+            nfree = jnp.sum(free.astype(i32))
+            s0 = jnp.argmax(jnp.where(free, phi, -jnp.inf))
+            h0 = jnp.argmin(jnp.where(free, phi, jnp.inf))
+            _, e_s0 = est_stats(c, s0)
+            _, e_h0 = est_stats(c, h0)
+            eps0 = jnp.maximum(e_s0, e_h0)
+            enabled = (cs.adaptive_tau
+                       & (c["tau_adj"] < cs.max_tau_adjustments))
+            t_new, t_chg, t_dec = kref.adjust_tau(
+                phi[s0], phi[h0], eps0, c["tau"], eta=cs.eta,
+                eps_lower=cs.eps_lower, eps_upper=cs.eps_upper,
+                tau_increase=cs.tau_increase, enabled=enabled)
+            app = (nfree >= 2) & jnp.isfinite(eps0)
+            detect_tau = jnp.where(app & t_dec, t_new, c["tau"])
+            c = dict(c,
+                     tau=jnp.where(app & t_chg, t_new, c["tau"]),
+                     tau_adj=c["tau_adj"] + (app & t_chg).astype(i32))
+            # the skewed set: free workers >= eta whose gap to the free
+            # minimum (excluding themselves) reaches detect_tau
+            minf = jnp.where(free, phi, jnp.inf)
+            i1 = jnp.argmin(minf)
+            m1 = minf[i1]
+            m2 = jnp.min(jnp.where(free & (idx != i1), phi, jnp.inf))
+            min_excl = jnp.where(idx == i1, m2, m1)
+            skewed = free & (phi >= cs.eta) & (phi - min_excl >= detect_tau)
+            shares = predicted_shares(c)
+            L = tuples_left
+
+            def asg_body(_, st):
+                c, taken, processed = st
+                mask = skewed & ~processed
+                s = jnp.argmax(jnp.where(mask, phi, -jnp.inf))
+                have = jnp.any(mask)
+                cands = (free & ~taken & (phi[s] - phi >= detect_tau)
+                         & (idx != s) & have)
+                ncand = jnp.sum(cands.astype(i32))
+                # choose_helpers, max_helpers=1: lexicographic min by
+                # (f_hat, phi, index) — the host's stable double sort
+                f_m = jnp.where(cands, shares, jnp.inf)
+                bf = jnp.min(f_m)
+                tie = cands & (shares == bf)
+                bp = jnp.min(jnp.where(tie, phi, jnp.inf))
+                h = jnp.argmax(tie & (phi == bp))
+                f_s = shares[s]
+                f_h = shares[h]
+                lr_max = (f_s - (f_s + f_h) / 2.0) * L
+                future = jnp.maximum(L, 0.0) * f_s    # M = 0 (inf rate)
+                chi = jnp.minimum(lr_max, future)
+                accept = have & (ncand > 0) & (chi >= -1e-12)
+                # all of s's candidates become taken (host assign_helpers)
+                taken = taken | jnp.where(ncand > 0, cands,
+                                          jnp.zeros_like(cands))
+                processed = processed.at[s].set(processed[s] | have)
+                if cs.enable_phase1:
+                    w_new, changed = apply_phase1(c, s, h)
+                    ph = i32(PH1)
+                else:
+                    w_new, changed = apply_phase2(c, s, h)
+                    ph = i32(PH2)
+                c = dict(
+                    c,
+                    weights=jnp.where(accept, w_new, c["weights"]),
+                    epoch=c["epoch"] + (accept & changed).astype(i32),
+                    mit_active=c["mit_active"].at[s].set(
+                        c["mit_active"][s] | accept),
+                    mit_helper=c["mit_helper"].at[s].set(
+                        jnp.where(accept, h.astype(i32),
+                                  c["mit_helper"][s])),
+                    mit_phase=c["mit_phase"].at[s].set(
+                        jnp.where(accept, ph, c["mit_phase"][s])),
+                    mit_calm=c["mit_calm"].at[s].set(
+                        jnp.where(accept, i32(0), c["mit_calm"][s])),
+                    mit_seq=c["mit_seq"].at[s].set(
+                        jnp.where(accept, c["seq_next"], c["mit_seq"][s])),
+                    seq_next=c["seq_next"] + accept.astype(i32),
+                )
+                return c, taken, processed
+
+            taken0 = busy | skewed      # skewed workers can't help
+            c, _, _ = jax.lax.fori_loop(0, W, asg_body,
+                                        (c, taken0, jnp.zeros(W, bool)))
+            return c, arr
+
+        # Owner-attributed arrivals for this window (integer adds:
+        # order-independent, exact) + one observation-log entry so the
+        # boundary drain can replay the window through the host twin.
+        arr0 = (jnp.zeros(W, c["weights"].dtype)
+                .at[c["owner"]].add(arrived.astype(c["weights"].dtype)))
+        c = dict(c,
+                 log_phi=c["log_phi"].at[c["log_n"]].set(phi),
+                 log_arr=c["log_arr"].at[c["log_n"]].set(arr0),
+                 log_n=c["log_n"] + 1)
+        epoch0 = c["epoch"]
+
+        def tick_body(i, st):
+            t = t0 + i
+            fire = ((i < k) & (t >= cs.initial_delay)
+                    & (jnp.remainder(t - cs.initial_delay,
+                                     cs.metric_period) == 0))
+            return jax.lax.cond(fire, round_fn, lambda st: st, st)
+
+        c, _ = jax.lax.fori_loop(0, cs.KMAX, tick_body, (c, arr0))
+
+        def rebuild(c):
+            cdf, primary, is_split = kref.routing_consts(c["weights"])
+            return dict(c, cdf=cdf, primary=primary, is_split=is_split)
+
+        c = jax.lax.cond(c["epoch"] != epoch0, rebuild, lambda c: c, c)
+        return c, jnp.zeros_like(arrived)
+
+    return ctrl_step
+
+
+class _ReplayAdapter:
+    """Adapter shim for the boundary drain: replays the device-logged
+    observations of past windows through the host :class:`ReshapeController`
+    so the host twin re-derives (bit-identically) every decision the
+    device controller made in-dispatch.  ``key_shares`` is decision-
+    neutral for the eligible configuration (SBR phase 2 ignores it; full-
+    partition phase 1 uses it only for the unlogged ``moved`` field)."""
+
+    def __init__(self, base):
+        self._base = base
+        self.num_workers = base.num_workers
+        self.traits = base.traits
+        self.routing = base.routing
+        self._phi = np.zeros(base.num_workers)
+        self._arr = np.zeros(base.num_workers)
+        self._drained = True
+        self._left = 0.0
+        self._rate = 0.0
+
+    def set_window(self, phi, arr, left, rate):
+        self._phi = np.asarray(phi, dtype=np.float64)
+        self._arr = np.asarray(arr, dtype=np.float64).copy()
+        self._drained = False
+        self._left = float(left)
+        self._rate = float(rate)
+
+    def workloads(self):
+        return self._phi.copy()
+
+    def arrivals_by_owner(self):
+        if self._drained:
+            return np.zeros(self.num_workers)
+        self._drained = True
+        return self._arr
+
+    def key_shares(self, worker):
+        return {}
+
+    def state_units(self, worker, mode):
+        return 0.0
+
+    def begin_migration(self, skewed, helpers, mode):
+        return None
+
+    def tuples_left(self):
+        return self._left
+
+    def processing_rate(self):
+        return self._rate
+
+
+class DeviceController:
+    """Device-resident twin of one armed :class:`ReshapeController`.
+
+    While active, the engine stops host-stepping the controller: each
+    super-tick calls :meth:`super_tick`, which runs every covered metric
+    round inside one jitted ``controller_step`` against device-held
+    state, rewriting the routing consts in place (no readback beyond a
+    one-scalar epoch probe).  At every materialization boundary
+    :meth:`drain` replays the device-logged windows through the host
+    controller — the bit-exact oracle and arbitration point — then
+    compares the host-derived routing consts against the device's and
+    lets the host win on any mismatch.  Anything that mutates host keyed
+    state (migrations, merges, demotions) deactivates the device
+    controller; the host path resumes seamlessly from the drained twin.
+    """
+
+    #: observation-log capacity: drain when this many windows accumulate.
+    LOG_CAP = 64
+
+    def __init__(self, rt: "DeviceOpRuntime", controller):
+        self.rt = rt
+        self.host = controller
+        self.active = False
+        self.reason = None          # why deactivated (None while active)
+        self.cstate = None
+        self.spec: Optional[CtrlSpec] = None
+        self.meta: List[tuple] = []  # (t0, k, tuples_left, rate) per window
+        self.epoch_host = 0          # device epoch after the last step
+        self.epoch_synced = 0        # device epoch at the last drain
+        self._last_tick = controller._tick
+
+    # ---- eligibility --------------------------------------------------
+    @staticmethod
+    def ineligible_reason(controller, rt) -> Optional[str]:
+        """None iff this (controller, runtime) pair may run in-dispatch.
+
+        The device twin replicates exactly the paper's default control
+        path: SBR + SCATTERED (rewrites move no state), single helper,
+        full-partition phase 1, zero control delay, instant migration.
+        Anything else — MARKERS/REPLICATE strategies, SBK/SBP modes,
+        multi-helper, finite migration rates — stays on the host path.
+        """
+        from ..core.controller import ReshapeController
+        from ..core.state_migration import MigrationStrategy
+        from ..core.types import TransferMode
+        if type(controller) is not ReshapeController:
+            return "controller subclass"
+        cfg = controller.cfg
+        if controller.mode is not TransferMode.SBR:
+            return f"transfer mode {controller.mode.value}"
+        if controller.strategy is not MigrationStrategy.SCATTERED:
+            return f"strategy {controller.strategy}"
+        if cfg.control_delay_ticks != 0:
+            return "control delay"
+        if cfg.max_helpers != 1:
+            return "multi-helper"
+        if not cfg.phase1_full_partition:
+            return "partial-key phase 1"
+        if cfg.migration_rate != float("inf"):
+            return "finite migration rate"
+        if cfg.pinned_helpers:
+            return "pinned helpers"
+        if cfg.adaptive_tau and (cfg.eps_lower is None
+                                 or cfg.eps_upper is None):
+            return "unbounded adaptive tau"
+        if rt.kind == "sink":
+            return "sink"
+        if rt.W < 2:
+            return "single worker"
+        return None
+
+    @property
+    def routing_dirty(self) -> bool:
+        """True while the device consts carry rewrites the host table has
+        not seen yet (between an in-dispatch rewrite and the next drain)."""
+        return self.epoch_host != self.epoch_synced
+
+    # ---- arming / state build -----------------------------------------
+    def arm(self) -> bool:
+        # Scattered-arrival masking must be on from the first armed
+        # dispatch: an in-dispatch rewrite cannot retroactively flip it.
+        # On one-hot tables the mask is the identity, so arming early is
+        # bit-neutral.
+        self.rt.op.may_scatter = True
+        return self._build()
+
+    def _build(self) -> bool:
+        """(Re)build the device controller state from the host twin.
+        Returns False (deactivating) when the host state is not
+        representable on the device — the recorded demotion rules."""
+        host = self.host
+        cfg = host.cfg
+        rt = self.rt
+        from ..core.types import MitigationPhase
+        for m in host.mitigations.values():
+            if (len(m.helpers) != 1
+                    or m.phase not in (MitigationPhase.PHASE_ONE,
+                                       MitigationPhase.PHASE_TWO)):
+                self.deactivate("non-reformable mitigation", drain=False)
+                return False
+        if host._pending:
+            self.deactivate("pending control messages", drain=False)
+            return False
+        retire = (cfg.retire_after if cfg.retire_after is not None
+                  else cfg.sample_window)
+        self.spec = CtrlSpec(
+            W=rt.W, K=rt.K, window=int(cfg.sample_window),
+            R=self.LOG_CAP, KMAX=max(int(rt.engine.batch_ticks), 1),
+            eta=float(cfg.eta),
+            metric_period=max(1, int(cfg.metric_period)),
+            initial_delay=int(cfg.initial_delay_ticks),
+            adaptive_tau=bool(cfg.adaptive_tau),
+            eps_lower=float(cfg.eps_lower
+                            if cfg.eps_lower is not None else -np.inf),
+            eps_upper=float(cfg.eps_upper
+                            if cfg.eps_upper is not None else np.inf),
+            tau_increase=float(cfg.tau_increase),
+            max_tau_adjustments=int(cfg.max_tau_adjustments),
+            catchup_tolerance=float(cfg.catchup_tolerance),
+            retire_window=int(retire),
+            enable_phase1=bool(cfg.enable_phase1),
+            horizon=float(host.tracker.horizon))
+        jnp = _jnp()
+        table = rt.routing
+        window = int(cfg.sample_window)
+        obs = np.zeros((rt.W, window))
+        obs_n = np.zeros(rt.W, np.int32)
+        obs_pos = np.zeros(rt.W, np.int32)
+        for w, est in enumerate(host.tracker._estimators):
+            vals = list(est._obs)
+            obs[w, :len(vals)] = vals
+            obs_n[w] = len(vals)
+            obs_pos[w] = len(vals) % window
+        mit_active = np.zeros(rt.W, bool)
+        mit_helper = np.zeros(rt.W, np.int32)
+        mit_phase = np.zeros(rt.W, np.int32)
+        mit_calm = np.zeros(rt.W, np.int32)
+        mit_seq = np.zeros(rt.W, np.int32)
+        for seq, (s, m) in enumerate(host.mitigations.items()):
+            mit_active[s] = True
+            mit_helper[s] = m.helpers[0]
+            mit_phase[s] = int(m.phase.value)
+            mit_calm[s] = int(m.calm_rounds)
+            mit_seq[s] = seq
+        with _x64():
+            rt._refresh_consts(force=True)
+            self.cstate = dict(
+                weights=jnp.asarray(table.weights.copy()),
+                cdf=rt.consts["cdf"], primary=rt.consts["primary"],
+                is_split=rt.consts["is_split"], owner=rt.consts["owner"],
+                obs=jnp.asarray(obs), obs_n=jnp.asarray(obs_n),
+                obs_pos=jnp.asarray(obs_pos),
+                tau=jnp.asarray(float(host.tau), jnp.float64),
+                tau_adj=jnp.asarray(int(host.tau_adjustments), jnp.int32),
+                mit_active=jnp.asarray(mit_active),
+                mit_helper=jnp.asarray(mit_helper),
+                mit_phase=jnp.asarray(mit_phase),
+                mit_calm=jnp.asarray(mit_calm),
+                mit_seq=jnp.asarray(mit_seq),
+                seq_next=jnp.asarray(len(host.mitigations), jnp.int32),
+                epoch=jnp.asarray(0, jnp.int32),
+                log_phi=jnp.zeros((self.LOG_CAP, rt.W), jnp.float64),
+                log_arr=jnp.zeros((self.LOG_CAP, rt.W), jnp.float64),
+                log_n=jnp.asarray(0, jnp.int32))
+        self.meta = []
+        self.epoch_host = self.epoch_synced = 0
+        self._last_tick = host._tick
+        self.active = True
+        self.reason = None
+        return True
+
+    # ---- the per-super-tick in-dispatch step ---------------------------
+    def super_tick(self, t0: int, k: int) -> None:
+        host = self.host
+        cfg = host.cfg
+        rt = self.rt
+        rt.flush_staged()       # boundary sends land before the rounds
+        delay = int(cfg.initial_delay_ticks)
+        period = max(1, int(cfg.metric_period))
+        fired = [t for t in range(t0, t0 + k)
+                 if t >= delay and (t - delay) % period == 0]
+        self._last_tick = t0 + k - 1
+        if not fired:
+            return              # fast path: no metric round this window
+        if len(self.meta) >= self.spec.R:
+            self.drain()        # observation log full: reconcile first
+        if k > self.spec.KMAX:
+            self.spec = dataclasses.replace(self.spec, KMAX=int(k))
+        left = float(host.adapter.tuples_left())
+        rate = float(host.adapter.processing_rate())
+        jnp = _jnp()
+        step = _step_for("ctrl")
+        with _x64():
+            arrived = (rt.state["arrived"] if rt.state is not None
+                       else jnp.zeros(rt.K, jnp.int64))
+            phi = jnp.asarray(rt.workloads())
+            c, drained = step(self.spec, self.cstate, arrived, phi,
+                              np.int64(t0), np.int64(k),
+                              np.float64(left), np.float64(rate))
+        self.cstate = c
+        if rt.state is not None:
+            rt.state["arrived"] = drained
+        rt.consts = dict(cdf=c["cdf"], primary=c["primary"],
+                         is_split=c["is_split"], owner=c["owner"])
+        self.meta.append((t0, k, left, rate))
+        self.epoch_host = int(np.asarray(c["epoch"]))
+        host.rounds_on_device += len(fired)
+
+    # ---- boundary drain: mirror decisions into the host twin -----------
+    def drain(self) -> None:
+        if not self.active:
+            return
+        host = self.host
+        rt = self.rt
+        table = rt.routing
+        meta, self.meta = self.meta, []
+        if not meta:
+            if self._last_tick > host._tick:
+                host._tick = self._last_tick
+            return
+        n = int(np.asarray(self.cstate["log_n"]))
+        assert n == len(meta), "controller observation log out of step"
+        log_phi = np.asarray(self.cstate["log_phi"])[:n]
+        log_arr = np.asarray(self.cstate["log_arr"])[:n]
+        shim = _ReplayAdapter(host.adapter)
+        saved_adapter = host.adapter
+        saved_listener = table.listener
+        table.listener = None   # the device already routed post-rewrite
+        host.adapter = shim
+        try:
+            for (t0, k, left, rate), phi, arr in zip(meta, log_phi,
+                                                     log_arr):
+                shim.set_window(phi, arr, left, rate)
+                for t in range(t0, t0 + k):
+                    host.step(t)
+        finally:
+            host.adapter = saved_adapter
+            table.listener = saved_listener
+        if self._last_tick > host._tick:
+            host._tick = self._last_tick
+        host.sync_readbacks += 1
+        # Arbitration: the host twin is the oracle.  Its replayed table
+        # must equal the device's decision bit-for-bit; on mismatch the
+        # host wins and the device consts are re-uploaded from it.
+        table._refresh_derived()
+        jnp = _jnp()
+        ok = (np.array_equal(np.asarray(self.cstate["weights"]),
+                             table.weights)
+              and np.array_equal(np.asarray(self.cstate["cdf"]),
+                                 table.cdf32)
+              and np.array_equal(np.asarray(self.cstate["primary"]),
+                                 table._primary)
+              and np.array_equal(np.asarray(self.cstate["is_split"]),
+                                 table._is_split))
+        with _x64():
+            if not ok:
+                import warnings
+                warnings.warn(
+                    "device controller: in-dispatch decisions diverged "
+                    "from the host twin; host wins", RuntimeWarning,
+                    stacklevel=2)
+                self.cstate = dict(
+                    self.cstate,
+                    weights=jnp.asarray(table.weights.copy()),
+                    cdf=jnp.asarray(table.cdf32, jnp.float32),
+                    primary=jnp.asarray(table._primary),
+                    is_split=jnp.asarray(table._is_split))
+            self.cstate = dict(self.cstate,
+                               log_n=jnp.asarray(0, jnp.int32))
+        rt.consts = dict(cdf=self.cstate["cdf"],
+                         primary=self.cstate["primary"],
+                         is_split=self.cstate["is_split"],
+                         owner=self.cstate["owner"])
+        rt._consts_version = table.version
+        rt._consts_split = bool(table._any_split)
+        self.epoch_synced = self.epoch_host
+
+    # ---- lifecycle -----------------------------------------------------
+    def deactivate(self, reason: str, drain: bool = True) -> None:
+        """Demote to host stepping (drains pending decisions first unless
+        the caller knows there are none worth keeping)."""
+        if self.active and drain:
+            self.drain()
+        self.active = False
+        self.reason = reason
+
+    def on_restore(self) -> None:
+        """Checkpoint restore: in-flight device decisions die with the
+        restored state; re-form from the restored host twin, or demote
+        when its mitigation state is not representable in-dispatch."""
+        self.meta = []
+        self.epoch_host = self.epoch_synced = 0
+        self.active = False
+        self._build()
 
 
 # --------------------------------------------------------------------- #
@@ -718,6 +1402,9 @@ class DeviceOpRuntime:
         self.chain_down: Optional["DeviceOpRuntime"] = None
         self._chain_serial = -1     # engine super-tick serial last chained
         self._chain_disabled = False  # a fused dispatch failed: stay apart
+        # ---- in-dispatch control plane (set by arm_controller) --------- #
+        self.ctrl: Optional[DeviceController] = None
+        self._ctrl_refused: Optional[str] = None
 
     # ---- small helpers ------------------------------------------------ #
     def _spec(self, any_split: Optional[bool] = None) -> StepSpec:
@@ -725,6 +1412,12 @@ class DeviceOpRuntime:
         rt._refresh_derived()
         if any_split is None:
             any_split = bool(rt._any_split)
+        if self.ctrl is not None and self.ctrl.active:
+            # An in-dispatch rewrite may split keys mid-window; trace the
+            # split-aware step up front.  On one-hot tables the saturated
+            # cdf routes every draw to the primary, so this is bit-neutral
+            # while no split exists.
+            any_split = True
         return StepSpec(kind=self.kind, W=self.W, K=self.K, cap=self.cap,
                         B=self.B, any_split=bool(any_split),
                         may_scatter=bool(self.op.may_scatter),
@@ -746,11 +1439,48 @@ class DeviceOpRuntime:
     def received_totals(self) -> np.ndarray:
         return self.received.astype(np.float64)
 
+    def _live_token(self):
+        """The routing token of the *live* (possibly device-rewritten)
+        table.  While the in-dispatch controller holds rewrites the host
+        table has not seen yet, no host-side token can describe the
+        device consts — chain fusion and placement epochs must treat the
+        table as unprovable (None) until the next drain reconciles."""
+        if (self.ctrl is not None and self.ctrl.active
+                and self.ctrl.routing_dirty):
+            return None
+        return self.routing.routing_token()
+
+    # ---- in-dispatch control plane ------------------------------------ #
+    def arm_controller(self, controller) -> bool:
+        """Attach a device-resident twin of ``controller`` (idempotent).
+        Returns True when armed; refusals are memoized per runtime."""
+        if self.ctrl is not None:
+            if self.ctrl.host is controller:
+                return self.ctrl.active
+            self.ctrl.deactivate("controller replaced")
+            self.ctrl = None
+        if self._ctrl_refused is not None:
+            return False
+        reason = DeviceController.ineligible_reason(controller, self)
+        if reason is not None:
+            self._ctrl_refused = reason
+            return False
+        ctrl = DeviceController(self, controller)
+        if not ctrl.arm():
+            return False
+        self.ctrl = ctrl
+        return True
+
     # ---- demotion (host fallback) ------------------------------------- #
     def demote(self, reason: str) -> None:
         """Fall back to the per-chunk host pallas path (rare: 2-D vals,
         an untraceable user fn, or a second in-edge)."""
         from .exchange import Exchange
+        if self.ctrl is not None:
+            # sync_host below drains via sync_stats; deactivate without a
+            # second drain so the swap sees a quiesced control plane.
+            self.ctrl.deactivate(f"demoted({reason})", drain=True)
+            self.ctrl = None
         self._unlink_chain()
         staged, self.staged, self.staged_live = self.staged, [], 0
         if self.kind == "sink":
@@ -1021,10 +1751,18 @@ class DeviceOpRuntime:
                               bo=jnp.asarray(new_o))
 
     # ---- routing constants / split counters --------------------------- #
-    def _refresh_consts(self) -> None:
+    def _refresh_consts(self, force: bool = False) -> None:
         jnp = _jnp()
         rt = self.routing
         rt._refresh_derived()
+        if self.ctrl is not None and self.ctrl.active and not force:
+            # While armed, the device consts are ahead of the host table
+            # between drains: never clobber them from the host copy.  A
+            # genuine host-side version bump (an out-of-band rewrite the
+            # controller did not make) demotes the control plane first.
+            if self._consts_version == rt.version:
+                return
+            self.ctrl.deactivate("out-of-band table rewrite")
         if self.consts is None or self._consts_version != rt.version:
             with _x64():
                 self.consts = dict(
@@ -1194,7 +1932,7 @@ class DeviceOpRuntime:
                 or not self._preserves_keys()
                 or budget != eng._super_k * self.op.service_rate):
             return None
-        tok = self.routing.routing_token()
+        tok = self._live_token()
         if tok is None:
             return None
         members = [self]
@@ -1202,7 +1940,7 @@ class DeviceOpRuntime:
         while True:
             d = r.chain_down
             if (d is None or d.op.device is not d or d.op.finished
-                    or d.routing.routing_token() != tok):
+                    or d._live_token() != tok):
                 break
             if d.kind == "sink" and d.use_kernel:
                 # The per-edge sink step folds through the Pallas
@@ -1244,7 +1982,7 @@ class DeviceOpRuntime:
                 r.tick(0)               # budget 0 never chains: per-edge
         chunks: List[DeviceChunk] = []
         ingested = False
-        tok = self.routing.routing_token()
+        tok = self._live_token()
         try:
             empty_before = []
             for i, (r, b) in enumerate(zip(members, budgets)):
@@ -1353,7 +2091,7 @@ class DeviceOpRuntime:
             # now-unrecoverable table: None).  Content layered over
             # differently-placed backlog poisons the epoch until the
             # rings drain.
-            tok = (self.routing.routing_token()
+            tok = (self._live_token()
                    if self._consts_version == self.routing.version
                    else None)
             if int(self.lens.sum()) == 0:
@@ -1411,12 +2149,25 @@ class DeviceOpRuntime:
     # ---- boundary materialization ------------------------------------- #
     def sync_stats(self) -> None:
         """Drain the device per-key arrival accumulators into the host
-        arrays the controller adapter reads (metric-round boundary)."""
+        arrays the controller adapter reads (metric-round boundary).
+
+        With an armed in-dispatch controller the boundary first mirrors
+        its device decisions into the host twin (:meth:`DeviceController.
+        drain`) so everything downstream — the adapter's arrival drain,
+        checkpoint cuts, rewrites — sees a reconciled control plane."""
+        if self.ctrl is not None and self.ctrl.active:
+            self.ctrl.drain()
         self.flush_staged()
         if self.state is None or self.op.arrived_by_key is None:
             return
         a = np.asarray(self.state["arrived"])
-        if a.any():
+        pending = a.any()
+        if not pending and self.ctrl is not None:
+            # The in-dispatch controller drains ``arrived`` itself (the
+            # owner-aggregated copy feeds its estimators), but the
+            # cumulative per-key totals still need to reach the host.
+            pending = bool(np.asarray(self.state["totals"]).any())
+        if pending:
             jnp = _jnp()
             t = np.asarray(self.state["totals"])
             self.op.arrived_by_key += a
@@ -1502,6 +2253,11 @@ class DeviceOpRuntime:
         The reload itself is deferred (``_reload_pending``) so a rewrite
         migrating m keys — m ``migrate_state`` calls, each guarded by a
         sync/stale pair — costs one download and one upload, not m."""
+        if self.ctrl is not None and self.ctrl.active:
+            # Host keyed state moved under the device controller (a
+            # migration or merge it cannot replicate): the recorded
+            # demotion rule is to reconcile and step on the host.
+            self.ctrl.deactivate("host state mutated")
         if self.state is None:
             return
         self.routing.sync_counters()
@@ -1531,3 +2287,5 @@ class DeviceOpRuntime:
             self.lens[:] = 0
         if not self.op.finished:
             self._ensure_ready()    # re-upload rings/state/backlog now
+        if self.ctrl is not None:
+            self.ctrl.on_restore()  # re-form from restored host (or demote)

@@ -283,7 +283,8 @@ class Engine:
                  reference: bool = False, batch_ticks: int = 1,
                  device_executor: Optional[str] = None,
                  device_use_kernel: bool = False,
-                 device_chain: Optional[bool] = None):
+                 device_chain: Optional[bool] = None,
+                 device_controller: Optional[bool] = None):
         self.partition_backend = partition_backend
         self.reference = bool(reference)
         self.batch_ticks = max(1, int(batch_ticks))
@@ -303,6 +304,20 @@ class Engine:
             import os
             device_chain = os.environ.get("REPRO_DEVICE_CHAIN", "1") != "0"
         self.device_chain = bool(device_chain)
+        #: device-resident control plane: run eligible attached
+        #: controllers (SBR + SCATTERED, single helper, zero control
+        #: delay) *inside* the jitted dispatch window — skew detection
+        #: and the phase-1/phase-2 split-ratio rewrites happen on device
+        #: and metric rounds no longer cut fused spans.  Default off so
+        #: the host-stepped path stays the A/B and correctness oracle;
+        #: enable with ``device_controller=True`` or
+        #: ``REPRO_DEVICE_CONTROLLER=1`` (see
+        #: :class:`repro.dataflow.device.DeviceController`).
+        if device_controller is None:
+            import os
+            device_controller = (
+                os.environ.get("REPRO_DEVICE_CONTROLLER", "0") == "1")
+        self.device_controller = bool(device_controller)
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []
@@ -410,6 +425,8 @@ class Engine:
         controller = controller_cls(adapter, cfg, **kwargs)
         edge.strategy = getattr(controller, "strategy", None)
         self.controllers.append(_Attached(op, edge, controller))
+        if self.device_controller and op.device is not None:
+            op.device.arm_controller(controller)
         return controller
 
     def _in_edge(self, op: Operator) -> Edge:
@@ -494,13 +511,38 @@ class Engine:
         # The window end is a control boundary: drain device-resident
         # per-key arrival stats for monitored operators so the metric
         # rounds read exactly what the host plane would have folded.
+        # With ``device_controller`` the armed runtimes instead run every
+        # covered metric round *in-dispatch* (no readback); their host
+        # twins are skipped below and reconciled at the next boundary.
         for att in self.controllers:
-            if att.op.device is not None:
-                att.op.device.sync_stats()
+            dev = att.op.device
+            if dev is None:
+                continue
+            if (self.device_controller and dev.ctrl is None
+                    and not att.op.finished):
+                dev.arm_controller(att.controller)   # late/post-restore arm
+            ctrl = dev.ctrl
+            if (ctrl is not None and ctrl.active
+                    and ctrl.host is att.controller):
+                if att.op.finished:
+                    ctrl.drain()
+                else:
+                    ctrl.super_tick(t0, k)
+                continue
+            dev.sync_stats()
+            if hasattr(att.controller, "sync_readbacks"):
+                # one O(W) boundary readback feeding this controller
+                att.controller.sync_readbacks += 1
         for t in range(t0, t0 + k):
             for att in self.controllers:
-                if not att.op.finished:
-                    att.controller.step(t)
+                if att.op.finished:
+                    continue
+                dev = att.op.device
+                if (dev is not None and dev.ctrl is not None
+                        and dev.ctrl.active
+                        and dev.ctrl.host is att.controller):
+                    continue     # already stepped inside the dispatch
+                att.controller.step(t)
             if self.sink is not None:
                 self.sink.snapshot(t)
         self.tick = t0 + k
@@ -535,6 +577,19 @@ class Engine:
             cfg = getattr(ctrl, "cfg", None)
             if cfg is None:             # unknown cadence: stay tick-exact
                 return 1
+            dev = getattr(att.op, "device", None)
+            if (dev is not None and dev.ctrl is not None
+                    and dev.ctrl.active and dev.ctrl.host is ctrl):
+                # Device-resident controller: its metric rounds run
+                # inside the fused dispatch, so they are no longer
+                # window boundaries.  Only deliverable control messages
+                # (never pending for an armed controller, but cheap to
+                # honor) still cut.
+                pending = [p.apply_at
+                           for p in getattr(ctrl, "_pending", ())]
+                if pending:
+                    nxt = min(nxt, max(t0, min(pending)))
+                continue
             period = max(1, int(getattr(cfg, "metric_period", 1)))
             delay = int(getattr(cfg, "initial_delay_ticks", 0))
             # First actionable tick (FlowJoin defers past its detection

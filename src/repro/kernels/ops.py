@@ -99,3 +99,51 @@ def segment_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
     return _segmm.segment_matmul(x, w, block_m=block_m, block_n=block_n,
                                  block_k=block_k,
                                  interpret=_default_interpret())
+
+
+@jax.jit
+def skew_test(phi_l, phi_c, eta, tau):
+    """Jitted twin of :func:`repro.core.skew_test.skew_test`.
+
+    Scalar/vector boolean: worker ``l`` is overloaded relative to ``c``.
+    Used in-dispatch by the device-resident controller
+    (:mod:`repro.dataflow.device`); exposed standalone for oracle tests.
+    """
+    from . import ref as _ref
+    return _ref.skew_test(phi_l, phi_c, eta, tau)
+
+
+@jax.jit
+def phase2_split(f_s, f_h):
+    """Jitted single-helper phase-2 split ratio (load_transfer twin).
+
+    Returns the fraction of the skewed worker's future share routed to
+    the helper under the paper's fair-share rule, bit-exact against
+    ``phase2_fractions_multi`` for the one-helper case.
+    """
+    from . import ref as _ref
+    return _ref.phase2_fraction(f_s, f_h)
+
+
+@jax.jit
+def adjust_tau(phi_s, phi_h, eps, tau, eta, eps_lower, eps_upper,
+               tau_increase, enabled):
+    """Jitted twin of :func:`repro.core.adaptive_tau.adjust_tau`.
+
+    Returns ``(new_tau, changed, decreased)``.
+    """
+    from . import ref as _ref
+    return _ref.adjust_tau(phi_s, phi_h, eps, tau, eta=eta,
+                           eps_lower=eps_lower, eps_upper=eps_upper,
+                           tau_increase=tau_increase, enabled=enabled)
+
+
+@jax.jit
+def routing_consts(weights):
+    """Jitted derived routing consts (cdf32/primary/is_split).
+
+    Bit-exact sequential twin of ``RoutingTable._refresh_derived`` — see
+    :func:`repro.kernels.ref.saturated_cdf32_seq`.
+    """
+    from . import ref as _ref
+    return _ref.routing_consts(weights)

@@ -165,3 +165,133 @@ def segment_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Grouped expert matmul: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Controller decision math (device-resident skew controller, PR 6)
+# ---------------------------------------------------------------------------
+# jnp twins of the host controller's arithmetic: the skew test
+# (core/skew_test.py), adaptive-tau adjustment (core/adaptive_tau.py), the
+# phase-2 split ratio (core/load_transfer.py) and the derived routing consts
+# (core/partitioner.routing_cdf32).  Each is written to be *bit-exact*
+# against its numpy/python twin under float64 (enable_x64): every reduction
+# the decision depends on is a strictly sequential left-to-right chain of
+# IEEE-754 adds, mirroring core.estimator.seq_sum — never jnp.sum/cumsum,
+# which XLA may reassociate.
+
+
+def seq_sum_vec(v: jnp.ndarray) -> jnp.ndarray:
+    """Sequential left-to-right sum of a 1-D vector (seq_sum twin)."""
+    def body(i, acc):
+        return acc + v[i]
+    return jax.lax.fori_loop(0, v.shape[0], body, jnp.zeros((), v.dtype))
+
+
+def ring_mean_stderr(obs_row: jnp.ndarray, n: jnp.ndarray,
+                     pos: jnp.ndarray):
+    """(predict, stderr) of one worker's observation ring.
+
+    Twin of ``MeanModelEstimator.predict``/``stderr``: the ring holds the
+    worker's sliding sample, ``n`` valid entries ending just before slot
+    ``pos``.  Iterates oldest → newest (deque order) with masked adds —
+    observations are non-negative, so appending ``+0.0`` for the unused
+    slots is bitwise-exact.  ``predict`` is 0.0 on an empty sample;
+    ``stderr`` is +inf below two samples, else ``d*sqrt(1+1/n)`` with
+    ``d = sqrt(ssq/(n-1))`` in the same operation order as the host.
+    """
+    window = obs_row.shape[0]
+    start = jnp.remainder(pos - n, window)
+
+    def val(i):
+        return jnp.where(i < n, obs_row[jnp.remainder(start + i, window)],
+                         0.0)
+
+    acc = jax.lax.fori_loop(0, window, lambda i, a: a + val(i),
+                            jnp.zeros((), obs_row.dtype))
+    nf = n.astype(obs_row.dtype)
+    mean = jnp.where(n > 0, acc / jnp.where(n > 0, nf, 1.0), 0.0)
+
+    def dev2(i):
+        d = val(i) - mean
+        return jnp.where(i < n, d * d, 0.0)
+
+    ssq = jax.lax.fori_loop(0, window, lambda i, a: a + dev2(i),
+                            jnp.zeros((), obs_row.dtype))
+    d = jnp.sqrt(ssq / jnp.where(n > 1, nf - 1.0, 1.0))
+    stderr = jnp.where(n < 2, jnp.inf, d * jnp.sqrt(1.0 + 1.0 / jnp.where(
+        n > 0, nf, 1.0)))
+    return mean, stderr
+
+
+def skew_test(phi_l: jnp.ndarray, phi_c: jnp.ndarray, eta, tau):
+    """Twin of :func:`repro.core.skew_test.skew_test` (boolean)."""
+    return (phi_l >= eta) & ((phi_l - phi_c) >= tau)
+
+
+def adjust_tau(phi_s: jnp.ndarray, phi_h: jnp.ndarray, eps: jnp.ndarray,
+               tau: jnp.ndarray, *, eta, eps_lower, eps_upper,
+               tau_increase, enabled):
+    """Twin of :func:`repro.core.adaptive_tau.adjust_tau`.
+
+    Returns ``(new_tau, changed, decreased)``; ``enabled`` folds in both
+    ``cfg.adaptive_tau`` and the ``adjustments_used < max`` budget check.
+    """
+    gap = phi_s - phi_h
+    passes = (gap >= tau) & (phi_s >= eta)
+    finite = jnp.isfinite(eps)
+    inc = enabled & finite & passes & (eps > eps_upper)
+    dec = (enabled & finite & ~passes & (eps < eps_lower) & (gap > 0)
+           & (phi_s >= eta))
+    new_tau = jnp.where(inc, tau + tau_increase,
+                        jnp.where(dec, jnp.maximum(gap, 1e-9), tau))
+    return new_tau, inc | dec, dec
+
+
+def phase2_fraction(f_s: jnp.ndarray, f_h: jnp.ndarray):
+    """Single-helper twin of ``load_transfer.phase2_fractions_multi``.
+
+    Returns the fraction r of the skewed worker's future share handed to
+    the helper (0.0 when ``f_s <= 0``, matching the host's empty-fraction
+    branch — the rewritten row then keeps the skewed worker at 1.0).
+    """
+    avg = (f_s + f_h) / 2.0
+    give = jnp.clip(avg - f_h, 0.0, None)
+    max_total = jnp.maximum(f_s - avg, 0.0)
+    give = jnp.where((give > max_total) & (max_total > 0),
+                     give * (max_total / give), give)
+    r = jnp.where(f_s > 0, give / jnp.where(f_s > 0, f_s, 1.0), 0.0)
+    return r
+
+
+def saturated_cdf32_seq(weights: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact twin of :func:`repro.core.partitioner.routing_cdf32`.
+
+    Unlike :func:`repro.core.ops.saturated_cdf32` (jnp.cumsum, which XLA
+    may reassociate on accelerators), this accumulates the float32 row-CDF
+    with an explicitly unrolled sequential column chain — the same adds in
+    the same order as numpy's cumsum — then saturates to 1.0 from each
+    row's last positive-weight column onward.
+    """
+    num_workers = weights.shape[1]
+    acc = jnp.zeros(weights.shape[0], jnp.float32)
+    cols = []
+    for j in range(num_workers):
+        acc = acc + weights[:, j].astype(jnp.float32)
+        cols.append(acc)
+    cdf = jnp.stack(cols, axis=1)
+    last = (num_workers - 1
+            - jnp.argmax((weights > 0)[:, ::-1], axis=1))
+    idx = jnp.arange(num_workers)
+    return jnp.where(idx[None, :] >= last[:, None], jnp.float32(1.0), cdf)
+
+
+def routing_consts(weights: jnp.ndarray):
+    """Derived routing consts (cdf32/primary/is_split) from f64 weights.
+
+    Twin of ``RoutingTable._refresh_derived`` for the device-resident
+    controller: recomputed once per dispatch after any in-jit rewrite.
+    """
+    cdf = saturated_cdf32_seq(weights)
+    primary = jnp.argmax(weights, axis=1).astype(jnp.int64)
+    is_split = jnp.sum((weights > 0).astype(jnp.int32), axis=1) > 1
+    return cdf, primary, is_split

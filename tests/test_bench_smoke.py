@@ -67,6 +67,20 @@ def test_bench_smoke_all_registered(tmp_path):
         rowstate["join_jit_unfused"]["placements_per_supertick"]
     assert all(r["plane"] == "device-jit" for m, r in rowstate.items()
                if m.endswith(("_jit", "_jit_unfused")))
+    # monitored-workflow rows (PR 6): with the controller armed the fused
+    # spans are no longer cut at metric rounds
+    ctrl = {r["mode"]: r for r in rows if r["mode"].startswith("ctrl_")}
+    assert {"ctrl_numpy", "ctrl_jit", "ctrl_jit_armed"} <= set(ctrl)
+    assert ctrl["ctrl_jit_armed"]["ticks_per_supertick"] > \
+        ctrl["ctrl_jit"]["ticks_per_supertick"]
+    # control-latency: the device-resident controller's mitigation table
+    # lands on its own smoke side path with the acceptance pair present
+    import csv
+    with open(tmp_path / "control_latency_mitigation.smoke.csv",
+              newline="") as f:
+        mrows = list(csv.DictReader(f))
+    assert {"device", "host-boundary"} <= {r["plane"] for r in mrows}
+    assert not (tmp_path / "control_latency_mitigation.csv").exists()
     after = os.path.getmtime(os.path.join(REPO,
                                           "BENCH_engine_throughput.json"))
     assert before == after

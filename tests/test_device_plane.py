@@ -143,6 +143,29 @@ class TestJitPlaneEquivalence:
             np.testing.assert_array_equal(wa.state.counts, wb.state.counts)
             assert not len(wb.scattered)        # merged at END
 
+    def test_forced_device_controller_leg(self, monkeypatch):
+        """REPRO_DEVICE_CONTROLLER=1 arms the monitored GroupBy's
+        in-dispatch controller, and on the same window schedule the run
+        — event stream included — stays bit-identical to the host-
+        stepped numpy plane (the forced off-TPU leg of the tentpole)."""
+        kw = dict(num_workers=6, controller=True, hot_frac=0.5, seed=1,
+                  n=8000)
+        a = _pipeline("numpy", **kw)
+        while not a[0].done():
+            a[0].run_super_tick(4)
+        monkeypatch.setenv("REPRO_DEVICE_CONTROLLER", "1")
+        b = _pipeline("pallas", device_executor="jit", **kw)
+        assert b[0].device_controller
+        dev = b[2].device
+        assert dev is not None and dev.ctrl is not None and dev.ctrl.active
+        while not b[0].done():
+            b[0].run_super_tick(4)
+        _assert_runs_identical(a, b)
+        ev = lambda c: [(e.tick, e.kind, e.skewed, tuple(e.helpers),
+                         tuple(sorted(e.detail.items()))) for e in c.events]
+        assert ev(a[3]) == ev(b[3])
+        assert any(e.kind == "phase2" for e in b[3].events)
+
     def test_w1_full_device_plane_matches_numpy(self):
         """W1 under reshape: since the row-state operator set landed,
         *every* edge — filter, the monitored HashJoinProbe, sink — runs
