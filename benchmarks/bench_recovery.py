@@ -1,0 +1,147 @@
+"""Resilience bench: checkpoint cost, recovery latency, replay vs grid.
+
+Three row families, one table (``results/bench/recovery.csv``):
+
+``cut-active`` / ``cut-idle``
+    Full vs incremental cut cost on W1.  Active cuts are taken every few
+    windows while the engine runs (dirty sections dominate); idle cuts
+    are taken back-to-back on the finished engine — the incremental
+    builder reuses every clean section, so this is the headline
+    "idle ops cost O(1) per cut" comparison the full builder can't match.
+
+``recovery``
+    For several checkpoint grids ``every_ticks``: run W1 with a
+    coordinator polling at canonical window starts, fail mid-run,
+    measure the ``recover()`` wall time and the replayed-ticks cost,
+    and confirm the run completes.
+
+``chaos``
+    One seeded end-to-end :class:`~repro.dataflow.resilience.ChaosRunner`
+    schedule on W1; emits injected/recovered counts and whether the
+    final ``Sink.series`` is bit-identical to the fault-free run (the
+    chaos harness's core invariant, asserted green in
+    ``tests/test_resilience.py``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dataflow import checkpoint as ckpt
+from repro.dataflow import resilience as rs
+from repro.dataflow.workflows import build_w1
+
+from .common import Timer, emit, provenance
+
+KEYS = ["case", "mode", "every", "cuts", "cut_ms", "reused_ops",
+        "copied_ops", "reused_edges", "copied_edges", "checkpoints",
+        "replayed_ticks", "recover_ms", "completion_ticks", "seed",
+        "faults", "recovered", "identical"]
+
+IDLE_CUTS = 20
+
+
+def _wf(scale):
+    return build_w1(strategy="reshape", scale=scale, batch_ticks=4)
+
+
+def _advance(eng, coord=None, until=None):
+    while not eng.done() and (until is None or eng.tick < until):
+        if coord is not None:
+            coord.maybe_checkpoint()
+        eng.run_super_tick(eng._fusible_ticks(eng.batch_ticks))
+
+
+def _series_equal(a, b):
+    return (len(a) == len(b)
+            and all(t1 == t2 and np.array_equal(c1, c2)
+                    for (t1, c1), (t2, c2) in zip(a, b)))
+
+
+def _cut_cost_rows(scale):
+    rows = []
+    for mode, incremental in (("full", False), ("incremental", True)):
+        wf = _wf(scale)
+        eng = wf.engine
+        builder = ckpt.CutBuilder(eng, incremental=incremental)
+        t_active, n_active = 0.0, 0
+        while not eng.done():
+            eng.run_super_tick(eng._fusible_ticks(eng.batch_ticks))
+            if eng.super_ticks % 8 == 0:
+                with Timer() as t:
+                    builder.build()
+                t_active += t.s
+                n_active += 1
+        rows.append(dict(
+            case="cut-active", mode=mode, cuts=n_active,
+            cut_ms=round(1e3 * t_active / max(n_active, 1), 3),
+            reused_ops=builder.reused_ops, copied_ops=builder.copied_ops,
+            reused_edges=builder.reused_edges,
+            copied_edges=builder.copied_edges))
+        # idle: the engine is done, nothing moves between cuts — the
+        # incremental builder reuses every section after the first
+        builder = ckpt.CutBuilder(eng, incremental=incremental)
+        builder.build()
+        t_idle = 0.0
+        for _ in range(IDLE_CUTS):
+            with Timer() as t:
+                builder.build()
+            t_idle += t.s
+        rows.append(dict(
+            case="cut-idle", mode=mode, cuts=IDLE_CUTS,
+            cut_ms=round(1e3 * t_idle / IDLE_CUTS, 3),
+            reused_ops=builder.reused_ops, copied_ops=builder.copied_ops,
+            reused_edges=builder.reused_edges,
+            copied_edges=builder.copied_edges))
+    return rows
+
+
+def _recovery_rows(scale):
+    probe = _wf(scale)
+    probe.run()
+    total = probe.engine.tick
+    fail_at = max(8, (total // 2) & ~3)     # a canonical window start
+    rows = []
+    for every in (16, 32, 64):
+        wf = _wf(scale)
+        eng = wf.engine
+        coord = ckpt.CheckpointCoordinator(eng, every_ticks=every)
+        _advance(eng, coord, until=fail_at)
+        t_fail = eng.tick
+        with Timer() as t:
+            cut = coord.recover()
+        _advance(eng, coord)
+        rows.append(dict(
+            case="recovery", every=every,
+            checkpoints=coord.checkpoints_taken,
+            replayed_ticks=t_fail - cut.tick,
+            recover_ms=round(1e3 * t.s, 3),
+            completion_ticks=eng.tick))
+    return rows
+
+
+def _chaos_row(scale, seed=3):
+    base = _wf(scale)
+    base.run()
+    wf = _wf(scale)
+    plan = rs.FaultPlan.from_seed(seed,
+                                  max_tick=max(2, base.engine.tick // 2))
+    runner = rs.ChaosRunner(wf.engine, plan, every_ticks=16)
+    runner.run()
+    return dict(
+        case="chaos", seed=seed, faults=sum(runner.injected.values()),
+        recovered=runner.recovered,
+        checkpoints=runner.coord.checkpoints_taken,
+        identical=int(_series_equal(wf.sink.series, base.sink.series)),
+        completion_ticks=wf.engine.tick)
+
+
+def run(scale: float = 1.0) -> None:
+    rows = _cut_cost_rows(scale)
+    rows += _recovery_rows(scale)
+    rows.append(_chaos_row(scale))
+    emit("recovery", rows, KEYS, size=dict(scale=scale),
+         prov=provenance())
+
+
+if __name__ == "__main__":
+    run()

@@ -45,6 +45,8 @@ BENCHES = [
     ("sort", "bench_sort", "§7.10 Table2 sort"),
     ("multi_helpers", "bench_multi_helpers", "§7.11 Fig26 multi-helper"),
     ("moe_balance", "bench_moe_balance", "§7.12 second engine (MoE)"),
+    ("recovery", "bench_recovery",
+     "resilience: cut cost full vs incremental, recovery latency, chaos"),
     ("roofline", "roofline", "§Roofline table from the dry-run artifacts"),
 ]
 
@@ -76,6 +78,16 @@ def _smoke_check(name: str) -> str:
                 "git_sha", "jax_backend", "timestamp"}
         if not data or not all(need <= set(r) for r in data):
             return f"{name}: perf JSON rows missing fields {need}"
+    if name == "recovery":
+        idle = [r for r in rows if r["case"] == "cut-idle"]
+        if {r["mode"] for r in idle} != {"full", "incremental"}:
+            return f"{name}: missing full/incremental cut-idle rows"
+        inc = next(r for r in idle if r["mode"] == "incremental")
+        if int(inc["reused_ops"]) <= 0:
+            return f"{name}: incremental idle cuts reused no sections"
+        chaos = [r for r in rows if r["case"] == "chaos"]
+        if not chaos or int(chaos[0]["identical"]) != 1:
+            return f"{name}: chaos run not bit-identical"
     if name == "control_latency":
         # the mitigation-latency pair (PR 6) lands in its own table;
         # required whenever the container has jax (the bench emits it

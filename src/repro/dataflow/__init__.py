@@ -18,7 +18,12 @@ Layout:
   datasets.py    synthetic tweet/DSB/TPC-H/changing-distribution streams
   workflows.py   the paper's W1-W4 experiment graphs
   metrics.py     load-balancing ratio, result-ratio series (§7 metrics)
-  checkpoint.py  aligned snapshots + recovery (§2.2 fault tolerance)
+  checkpoint.py  aligned snapshots + recovery (§2.2 fault tolerance):
+                 incremental checksummed cuts, disk persistence,
+                 corrupted-cut fallback (CheckpointCoordinator)
+  resilience.py  incident log, retry/backoff policy, and the seeded
+                 chaos harness (FaultPlan/ChaosRunner) asserting
+                 bit-identical recovery under injected faults
 """
 from .engine import Edge, Engine, EngineAdapter, Source
 from .exchange import (
@@ -44,18 +49,36 @@ from .operators import (
     Worker,
 )
 from .baselines import FlowJoinController, FluxController
+from .checkpoint import CheckpointCoordinator, Cut, CutBuilder
+from .resilience import (
+    ChaosRunner,
+    FaultEvent,
+    FaultPlan,
+    Incident,
+    IncidentLog,
+    RetryPolicy,
+)
 from .workflows import Workflow, build_w1, build_w2, build_w3, build_w4
 
 __all__ = [
     "AggStore",
+    "ChaosRunner",
+    "CheckpointCoordinator",
+    "Cut",
+    "CutBuilder",
     "DeviceExchange",
     "Edge",
     "Engine",
     "EngineAdapter",
     "Exchange",
+    "FaultEvent",
+    "FaultPlan",
+    "Incident",
+    "IncidentLog",
     "NumpyPartitionBackend",
     "PallasPartitionBackend",
     "PartitionBackend",
+    "RetryPolicy",
     "ScatterPlan",
     "ScopeRows",
     "Source",

@@ -179,6 +179,7 @@ from typing import Callable, List, Optional, Union
 
 import numpy as np
 
+from .resilience import InjectedDispatchFault
 from .tuples import Chunk, ring_span
 
 __all__ = ["DeviceChunk", "DeviceOpRuntime", "resolve_executor", "wireable"]
@@ -1215,6 +1216,13 @@ class DeviceController:
         host = self.host
         cfg = host.cfg
         rt = self.rt
+        chaos = getattr(rt.engine, "chaos", None)
+        if chaos is not None and not self._chaos_dispatch_ok(chaos):
+            # Demoted drain-first; the engine's armed-controller branch
+            # skipped the boundary sync for this window, so run it here
+            # (the per-tick loop below the boundary will host-step).
+            rt.sync_stats()
+            return
         rt.flush_staged()       # boundary sends land before the rounds
         delay = int(cfg.initial_delay_ticks)
         period = max(1, int(cfg.metric_period))
@@ -1300,6 +1308,12 @@ class DeviceController:
                     "device controller: in-dispatch decisions diverged "
                     "from the host twin; host wins", RuntimeWarning,
                     stacklevel=2)
+                eng = self.rt.engine
+                eng.incidents.record(
+                    "ctrl-mismatch", tick=eng.tick, edge=self.rt.op.name,
+                    cause="in-dispatch decisions diverged from the "
+                          "host twin",
+                    action="host wins; device consts re-uploaded")
                 self.cstate = dict(
                     self.cstate,
                     weights=jnp.asarray(table.weights.copy()),
@@ -1316,12 +1330,39 @@ class DeviceController:
         rt._consts_split = bool(table._any_split)
         self.epoch_synced = self.epoch_host
 
+    # ---- retry/backoff against injected dispatch faults ----------------
+    def _chaos_dispatch_ok(self, chaos) -> bool:
+        """Consume any injected dispatch fault with retry/backoff; on
+        exhaustion demote the controller drain-first (host stepping
+        resumes, bit-identical) and return False."""
+        eng = self.rt.engine
+        policy = eng.retry_policy
+        for attempt in range(policy.max_attempts + 1):
+            try:
+                chaos.dispatch_fault(self.rt)
+                return True
+            except InjectedDispatchFault as exc:
+                if attempt < policy.max_attempts:
+                    eng.incidents.record(
+                        "retry", tick=eng.tick, edge=self.rt.op.name,
+                        cause=str(exc),
+                        action="retry controller dispatch",
+                        attempt=attempt + 1)
+                    policy.sleep(attempt + 1)
+        self.deactivate("dispatch retries exhausted", drain=True)
+        return False
+
     # ---- lifecycle -----------------------------------------------------
     def deactivate(self, reason: str, drain: bool = True) -> None:
         """Demote to host stepping (drains pending decisions first unless
         the caller knows there are none worth keeping)."""
-        if self.active and drain:
-            self.drain()
+        if self.active:
+            if drain:
+                self.drain()
+            eng = self.rt.engine
+            eng.incidents.record(
+                "ctrl-demotion", tick=eng.tick, edge=self.rt.op.name,
+                cause=reason, action="host-stepped controller resumes")
         self.active = False
         self.reason = reason
 
@@ -1471,6 +1512,26 @@ class DeviceOpRuntime:
         self.ctrl = ctrl
         return True
 
+    # ---- retry/backoff against injected dispatch faults ---------------- #
+    def _chaos_dispatch_ok(self, chaos) -> bool:
+        """Consume any injected dispatch fault with retry/backoff; on
+        exhaustion demote this edge drain-first (the per-chunk host path
+        replays the tick bit-identically) and return False."""
+        policy = self.engine.retry_policy
+        for attempt in range(policy.max_attempts + 1):
+            try:
+                chaos.dispatch_fault(self)
+                return True
+            except InjectedDispatchFault as exc:
+                if attempt < policy.max_attempts:
+                    self.engine.incidents.record(
+                        "retry", tick=self.engine.tick, edge=self.op.name,
+                        cause=str(exc), action="retry device dispatch",
+                        attempt=attempt + 1)
+                    policy.sleep(attempt + 1)
+        self.demote("dispatch retries exhausted")
+        return False
+
     # ---- demotion (host fallback) ------------------------------------- #
     def demote(self, reason: str) -> None:
         """Fall back to the per-chunk host pallas path (rare: 2-D vals,
@@ -1502,6 +1563,9 @@ class DeviceOpRuntime:
                 ex.sent_per_worker[0] -= ch.n_live
         self.edge.exchange = ex
         self.edge.device_plane = f"demoted({reason})"
+        self.engine.incidents.record(
+            "demotion", tick=self.engine.tick, edge=self.op.name,
+            cause=reason, action="per-chunk host pallas path")
         for ch in staged:
             k, v = ch.to_host() if isinstance(ch, DeviceChunk) else ch
             if getattr(k, "size", len(k)):
@@ -1826,6 +1890,9 @@ class DeviceOpRuntime:
     def tick(self, budget: int) -> List:
         if self.state is None and not self.staged:
             return []                  # nothing ever arrived
+        chaos = getattr(self.engine, "chaos", None)
+        if chaos is not None and not self._chaos_dispatch_ok(chaos):
+            return self.op.tick(budget)    # demoted: host path replays
         if self.kind == "probe" and not self._probe_capacity_ok(budget):
             # A build table (or budget) skewed enough that the padded
             # emit buffer W * B * M would blow the ceiling: the host
@@ -2026,6 +2093,10 @@ class DeviceOpRuntime:
                 f"device plane: fused chain dispatch at {self.op.name!r} "
                 f"failed ({type(exc).__name__}: {exc}); falling back to "
                 f"per-edge dispatch", RuntimeWarning, stacklevel=2)
+            self.engine.incidents.record(
+                "chain-fallback", tick=self.engine.tick,
+                edge=self.op.name, cause=f"{type(exc).__name__}: {exc}",
+                action="per-edge dispatch")
             if not ingested:
                 self.staged = chunks + self.staged
                 self.staged_live = sum(c.n_live for c in self.staged)

@@ -83,6 +83,7 @@ from ..core.types import MigrationStrategy, ReshapeConfig, StateMutability, Tran
 from .device import DeviceChunk
 from .exchange import BackendSpec, DeviceExchange, Exchange
 from .operators import Operator, Sink
+from .resilience import IncidentLog, RetryPolicy
 from .tuples import Chunk, concat
 
 
@@ -336,6 +337,14 @@ class Engine:
         self._super_serial = 0
         self._super_k = 1
         self.super_ticks = 0
+        #: resilience layer (see :mod:`repro.dataflow.resilience`):
+        #: structured queryable trail of every demotion, retry,
+        #: mismatch-arbitration and recovery on this engine, plus the
+        #: retry/backoff policy device dispatch consults before demoting.
+        #: ``chaos`` is set by an active ChaosRunner (fault injection).
+        self.incidents = IncidentLog()
+        self.retry_policy = RetryPolicy()
+        self.chaos = None
 
     # ---- graph construction ------------------------------------------- #
     def add_source(self, src: Source) -> Source:

@@ -150,6 +150,15 @@ def scatter_order(dest: np.ndarray, hist: np.ndarray) -> Optional[np.ndarray]:
                 f"a full-width stable argsort (correct, but O(n log n) "
                 f"per chunk instead of the counting scatter). "
                 f"(warned once)", RuntimeWarning, stacklevel=2)
+            # Module-level site (no engine in scope): the process-wide
+            # incident log keeps the cliff queryable, once per process
+            # exactly like the warning.
+            from . import resilience
+            resilience.GLOBAL.record(
+                "radix-cliff",
+                cause=f"{hist.size} workers > int16 radix limit "
+                      f"({MAX_RADIX_WORKERS})",
+                action="full-width stable argsort")
         return np.argsort(dest, kind="stable")
     return np.argsort(dest.astype(np.int16), kind="stable")
 

@@ -73,9 +73,22 @@ def test_bench_smoke_all_registered(tmp_path):
     assert {"ctrl_numpy", "ctrl_jit", "ctrl_jit_armed"} <= set(ctrl)
     assert ctrl["ctrl_jit_armed"]["ticks_per_supertick"] > \
         ctrl["ctrl_jit"]["ticks_per_supertick"]
+    # recovery rows (PR 8): incremental idle cuts reuse clean sections
+    # (the full builder never does), and the seeded chaos run's series
+    # is bit-identical to the fault-free run
+    import csv
+    with open(tmp_path / "recovery.smoke.csv", newline="") as f:
+        rrows = list(csv.DictReader(f))
+    idle = {r["mode"]: r for r in rrows if r["case"] == "cut-idle"}
+    assert {"full", "incremental"} <= set(idle)
+    assert int(idle["incremental"]["reused_ops"]) > 0
+    assert int(idle["full"]["reused_ops"]) == 0
+    chaos = [r for r in rrows if r["case"] == "chaos"]
+    assert chaos and int(chaos[0]["identical"]) == 1
+    assert all(int(r["replayed_ticks"]) >= 0 for r in rrows
+               if r["case"] == "recovery")
     # control-latency: the device-resident controller's mitigation table
     # lands on its own smoke side path with the acceptance pair present
-    import csv
     with open(tmp_path / "control_latency_mitigation.smoke.csv",
               newline="") as f:
         mrows = list(csv.DictReader(f))
