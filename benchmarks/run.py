@@ -117,6 +117,9 @@ def main() -> int:
     args = ap.parse_args()
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+        # Smoke doubles as the sanitizer leg: retrace sentinel, mirror
+        # cross-checks and NaN guards armed for every bench.
+        os.environ["REPRO_SANITIZE"] = "1"
         from . import common
         common.SMOKE = True
     failures = 0

@@ -1,0 +1,55 @@
+"""Plane-contract analyzer: static lints + runtime sanitizers for the
+device plane's invariants.
+
+Static rules (pure ``ast``, no imports of the analyzed code):
+
+========================  =============================================
+rule id                   contract enforced
+========================  =============================================
+``stale-capture``         jitted step closures capture only parameters,
+                          spec fields, and module constants
+``donation-unsafe``       donated state pytrees are never read after
+                          the dispatch that donated them
+``dtype-drift``           kernel/device constructors pin dtypes; no
+                          bare ``np.int64``/``float64`` in jitted code
+``unpaired-warning``      every ``warnings.warn`` in ``dataflow/``
+                          pairs with a structured ``Incident``
+``mirror-write``          host mirrors are written only at registered
+                          accounting sites
+========================  =============================================
+
+CLI: ``python -m repro.analysis src/ [--baseline analysis-baseline.json]``
+exits non-zero on findings not covered by the baseline.
+
+Runtime: ``REPRO_SANITIZE=1`` arms :mod:`repro.analysis.sanitize` — a
+retrace sentinel in every jitted step, a mirror-vs-materialized
+cross-check and NaN/inf fold guards at ``sync_host`` boundaries.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Tuple
+
+from . import captures, core, donation, dtypes, incidents, mirrors
+from .core import Baseline, Finding
+
+RULES = (captures, donation, dtypes, incidents, mirrors)
+
+__all__ = ["analyze", "Baseline", "Finding", "RULES"]
+
+
+def analyze(paths: Iterable[str],
+            baseline: Optional[Baseline] = None,
+            rules: Tuple = RULES,
+            ) -> Tuple[List[Finding], List[Finding]]:
+    """Run every rule over ``paths``; returns ``(new, suppressed)``
+    findings (all findings are new when ``baseline`` is None)."""
+    findings: List[Finding] = []
+    for path in core.collect_files(paths):
+        sf = core.parse_file(path)
+        for rule in rules:
+            if rule.applies(sf.relpath):
+                findings.extend(rule.check(sf))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    if baseline is None:
+        return findings, []
+    return baseline.filter(findings)

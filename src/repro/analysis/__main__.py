@@ -1,0 +1,48 @@
+"""CLI: ``python -m repro.analysis src/ [--baseline FILE]``.
+
+Prints structured findings (file:line, rule id, fix hint) and exits
+with the number of findings not covered by the baseline.  With
+``--write-baseline`` the current findings become the accepted set
+(edit the generated ``why`` fields — a baseline entry without a real
+reason is a bug).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import Baseline, analyze
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="device-plane contract analyzer")
+    ap.add_argument("paths", nargs="+", help="files or directories")
+    ap.add_argument("--baseline", default=None,
+                    help="accepted-findings JSON (see analysis-baseline"
+                         ".json)")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="write current findings as the new baseline")
+    args = ap.parse_args(argv)
+
+    baseline = Baseline.load(args.baseline) if args.baseline else None
+    new, suppressed = analyze(args.paths, baseline=baseline)
+
+    if args.write_baseline:
+        Baseline.save(args.write_baseline, new + suppressed,
+                      why="FIXME: justify or fix")
+        print(f"wrote {len(new) + len(suppressed)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+    for f in new:
+        print(f.format())
+    tail = f"{len(new)} finding(s)"
+    if baseline is not None:
+        tail += f", {len(suppressed)} baselined"
+    print(tail)
+    return min(len(new), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

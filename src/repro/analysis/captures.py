@@ -1,0 +1,125 @@
+"""Rule ``stale-capture``: jitted step closures may capture only
+trace-stable names.
+
+The device plane's jitted steps are built by ``_make_step*`` /
+``_make_ctrl_step`` factories and cached per :class:`StepSpec` — the
+spec tuple IS the trace-cache key.  Any *other* value a jitted body
+closes over (a builder parameter, a mutable computed in the builder) is
+invisible to that key: it is baked in at trace time and silently stale
+forever after — the class of bug PR 4's staged-chunk staleness fix
+patched by hand.
+
+Allowed captures inside the jitted function:
+  * its own parameters and locals (spec fields arrive via parameters);
+  * module-level bindings (imports, constants, helper functions) and
+    builtins — these are process-stable;
+  * builder-local bindings that are provably constant: imports,
+    ``def``s, literal constants, and calls to whitelisted module getters
+    (``_jnp``, ``importlib.import_module``).
+
+Everything else closed over from the builder scope is flagged.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import List
+
+from . import core
+
+RULE = "stale-capture"
+HINT = ("pass the value through the StepSpec (static) or as a traced "
+        "argument; a closure is invisible to the trace-cache key and "
+        "goes stale after the first trace")
+
+#: builder-local calls considered constant (module getters).
+CONST_GETTERS = {"_jnp", "importlib.import_module"}
+
+_BUILTINS = set(dir(builtins))
+
+
+def applies(relpath: str) -> bool:
+    return True     # inert unless the file defines step builders
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for n in ast.walk(dec):
+            if isinstance(n, ast.Attribute) and n.attr == "jit":
+                return True
+            if isinstance(n, ast.Name) and n.id == "jit":
+                return True
+    return False
+
+
+def _constantish(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_constantish(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return _constantish(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _constantish(node.left) and _constantish(node.right)
+    if isinstance(node, ast.Call):
+        return core.dotted(node.func) in CONST_GETTERS
+    return False
+
+
+def _loads(fn: ast.FunctionDef) -> dict:
+    """name -> first Load node, over the jitted body (decorators and
+    default expressions evaluate in the builder scope, not the trace)."""
+    out = {}
+    for stmt in fn.body:
+        for n in ast.walk(stmt):
+            if (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                    and n.id not in out):
+                out[n.id] = n
+    return out
+
+
+def check(sf: core.SourceFile) -> List[core.Finding]:
+    module_ok = core.module_bindings(sf.tree) | _BUILTINS | {"__name__"}
+    findings: List[core.Finding] = []
+    for builder in core.functions(sf.tree):
+        if not builder.name.startswith("_make"):
+            continue
+        jitted = [n for n in ast.walk(builder)
+                  if isinstance(n, ast.FunctionDef)
+                  and n is not builder and _is_jit_decorated(n)]
+        if not jitted:
+            continue
+        # classify every name the builder scope binds
+        builder_const, builder_mutable = set(), {}
+        builder_params = core.arg_names(builder.args)
+        for stmt in builder.body:
+            if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+                builder_const |= core.bound_names_shallow(stmt)
+            elif isinstance(stmt, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef, ast.ClassDef)):
+                builder_const.add(stmt.name)
+            elif isinstance(stmt, ast.Assign) and _constantish(stmt.value):
+                builder_const |= core.bound_names_shallow(stmt)
+            else:
+                for name in core.bound_names_shallow(stmt):
+                    builder_mutable.setdefault(name, stmt)
+        for fn in jitted:
+            bound = core.bound_names(fn) | {fn.name}
+            for name, node in sorted(_loads(fn).items(),
+                                     key=lambda kv: kv[1].lineno):
+                if name in bound or name in builder_const:
+                    continue
+                if name in builder_params or name in builder_mutable:
+                    findings.append(sf.finding(
+                        RULE, node,
+                        f"jitted step {fn.name!r} (builder "
+                        f"{builder.name!r}) closes over {name!r}, which "
+                        f"is neither a parameter, a spec field, nor a "
+                        f"module constant", HINT))
+                elif name not in module_ok:
+                    findings.append(sf.finding(
+                        RULE, node,
+                        f"jitted step {fn.name!r} (builder "
+                        f"{builder.name!r}) reads unresolvable name "
+                        f"{name!r}", HINT))
+    return findings

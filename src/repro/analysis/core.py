@@ -1,0 +1,234 @@
+"""Plane-contract analyzer core: findings, the committed baseline, and
+the file walk shared by every rule.
+
+The device plane (PRs 3-7) is held together by conventions — trace-safe
+closures, donate-then-never-read dispatches, exact host mirrors, paired
+warning/incident reporting, x64-proof dtypes.  Each rule in this package
+turns one convention into a machine check over ``src/repro/**`` (pure
+``ast``; no imports of the analyzed code).  Findings are structured
+records (rule id, file:line, message, fix hint) matched against a
+committed baseline so accepted pre-existing violations don't block CI
+while new ones do.
+
+Baselines are *count*-based: an entry accepts up to ``count`` findings
+with the same ``(rule, file, fingerprint)``; the fingerprint hashes the
+stripped source line, so entries survive unrelated line shifts but
+expire the moment the offending code changes.  Every entry carries a
+``why`` — a baseline without a reason is a bug, not an allowance.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str          # rule id, e.g. "stale-capture"
+    file: str          # path as given to the analyzer (forward slashes)
+    line: int          # 1-based
+    message: str       # what is wrong
+    hint: str          # how to fix it
+    snippet: str = ""  # stripped source line (fingerprint input)
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha1(
+            f"{self.rule}|{os.path.basename(self.file)}|{self.snippet}"
+            .encode()).hexdigest()
+        return h[:16]
+
+    def format(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+                f"\n    hint: {self.hint}")
+
+
+class Baseline:
+    """Accepted pre-existing findings, keyed ``(rule, file, fingerprint)``."""
+
+    def __init__(self, entries: Optional[List[dict]] = None) -> None:
+        self.entries = list(entries or [])
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            data = json.load(f)
+        return cls(data.get("entries", []))
+
+    @staticmethod
+    def save(path: str, findings: Iterable[Finding],
+             why: str = "baselined by --write-baseline") -> None:
+        groups: Dict[Tuple[str, str, str], dict] = {}
+        for f in findings:
+            key = (f.rule, f.file, f.fingerprint)
+            e = groups.setdefault(key, dict(
+                rule=f.rule, file=f.file, fingerprint=f.fingerprint,
+                snippet=f.snippet, count=0, why=why))
+            e["count"] += 1
+        entries = sorted(groups.values(),
+                         key=lambda e: (e["rule"], e["file"], e["snippet"]))
+        with open(path, "w") as fh:
+            json.dump({"version": 1, "entries": entries}, fh, indent=2)
+            fh.write("\n")
+
+    def filter(self, findings: List[Finding]
+               ) -> Tuple[List[Finding], List[Finding]]:
+        """Split findings into (new, suppressed-by-baseline)."""
+        budget: Dict[Tuple[str, str, str], int] = {}
+        for e in self.entries:
+            key = (e["rule"], e["file"], e["fingerprint"])
+            budget[key] = budget.get(key, 0) + int(e.get("count", 1))
+        new, suppressed = [], []
+        for f in findings:
+            key = (f.rule, f.file, f.fingerprint)
+            if budget.get(key, 0) > 0:
+                budget[key] -= 1
+                suppressed.append(f)
+            else:
+                new.append(f)
+        return new, suppressed
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed file handed to every applicable rule."""
+
+    path: str           # as given (display)
+    relpath: str        # normalized with forward slashes (rule scoping)
+    tree: ast.AST
+    lines: List[str]
+
+    def snippet(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str,
+                hint: str) -> Finding:
+        line = getattr(node, "lineno", 0)
+        return Finding(rule=rule, file=self.path, line=line,
+                       message=message, hint=hint,
+                       snippet=self.snippet(line))
+
+
+def collect_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        out.append(os.path.join(root, name))
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def parse_file(path: str) -> SourceFile:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    return SourceFile(path=path,
+                      relpath=path.replace(os.sep, "/"),
+                      tree=ast.parse(src, filename=path),
+                      lines=src.splitlines())
+
+
+# ------------------------------------------------------------------ #
+# small ast helpers shared by rules                                  #
+# ------------------------------------------------------------------ #
+def bound_names(node: ast.AST) -> set:
+    """Every name bound anywhere in ``node``'s subtree (params, assigns,
+    imports, defs, loop/with/except targets, comprehensions)."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx,
+                                                  (ast.Store, ast.Del)):
+            out.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            out.add(n.name)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.update(arg_names(n.args))
+        elif isinstance(n, ast.Lambda):
+            out.update(arg_names(n.args))
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for a in n.names:
+                out.add((a.asname or a.name).split(".")[0])
+        elif isinstance(n, ast.ExceptHandler) and n.name:
+            out.add(n.name)
+    return out
+
+
+def arg_names(args: ast.arguments) -> set:
+    out = set()
+    for a in (list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)):
+        out.add(a.arg)
+    if args.vararg:
+        out.add(args.vararg.arg)
+    if args.kwarg:
+        out.add(args.kwarg.arg)
+    return out
+
+
+def module_bindings(tree: ast.AST) -> set:
+    """Names bound at module top level (imports, defs, assignments)."""
+    out = set()
+    for n in getattr(tree, "body", []):
+        out |= bound_names_shallow(n)
+    return out
+
+
+def bound_names_shallow(stmt: ast.stmt) -> set:
+    """Names ``stmt`` binds in its own scope (covers compound statements
+    but does not descend into nested function/class/lambda bodies)."""
+    out = set()
+
+    def visit(n: ast.AST) -> None:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            out.add(n.name)        # the binding, not its internals
+            return
+        if isinstance(n, ast.Lambda):
+            return
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for a in n.names:
+                out.add((a.asname or a.name).split(".")[0])
+        elif isinstance(n, ast.ExceptHandler) and n.name:
+            out.add(n.name)
+        for c in ast.iter_child_nodes(n):
+            visit(c)
+
+    visit(stmt)
+    return out
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def functions(tree: ast.AST):
+    """Yield every FunctionDef/AsyncFunctionDef in the module."""
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield n

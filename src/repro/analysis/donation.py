@@ -1,0 +1,195 @@
+"""Rule ``donation-unsafe``: a donated state pytree must never be read
+after the dispatch that donated it.
+
+The device plane's jitted steps donate their state argument
+(``donate_argnums``) so XLA reuses the buffers in place; after the
+call the Python-side reference points at invalidated device memory.
+The only safe pattern is rebind-from-the-result (``self.state, ... =
+step(...)``).
+
+Resolution is intraprocedural and mostly exact:
+  * builders (``_make*`` functions with a jit-decorated inner function)
+    declare their ``donate_argnums`` in the decorator;
+  * the ``_step_for`` kind table maps string kinds to builders, so
+    ``step = _step_for("ctrl")`` resolves to the exact donate tuple;
+  * a variable or parameter named after a builder's inner function
+    (``step``) with no literal-kind binding defaults to the donate
+    tuple shared by those builders (the data-plane convention,
+    state at index 2).
+
+For each donating call, the donated argument expression (a name or
+attribute chain) is tracked through the statements that follow — any
+Load before the next rebinding of that exact expression is flagged.
+Statements are linearized in source order, so reads in a sibling branch
+of the rebinding are treated conservatively.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from . import core
+from .captures import _is_jit_decorated
+
+RULE = "donation-unsafe"
+HINT = ("rebind the donated variable from the dispatch result before "
+        "any read (``state, ... = step(...)``); donated buffers are "
+        "invalid after the call")
+
+
+def applies(relpath: str) -> bool:
+    return True     # inert unless the file defines/calls donating steps
+
+
+def _donate_argnums(fn: ast.FunctionDef) -> Optional[Tuple[int, ...]]:
+    for dec in fn.decorator_list:
+        for n in ast.walk(dec):
+            if isinstance(n, ast.keyword) and n.arg == "donate_argnums":
+                v = n.value
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    elts = [e.value for e in v.elts
+                            if isinstance(e, ast.Constant)]
+                    return tuple(int(e) for e in elts)
+                if isinstance(v, ast.Constant):
+                    return (int(v.value),)
+    return None
+
+
+def _builders(tree: ast.AST) -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    """builder name -> (inner jitted fn name, donate tuple)."""
+    out = {}
+    for builder in core.functions(tree):
+        if not builder.name.startswith("_make"):
+            continue
+        for fn in ast.walk(builder):
+            if (isinstance(fn, ast.FunctionDef) and fn is not builder
+                    and _is_jit_decorated(fn)):
+                donates = _donate_argnums(fn)
+                if donates:
+                    out[builder.name] = (fn.name, donates)
+    return out
+
+
+def _kind_table(tree: ast.AST, builders) -> Dict[str, Tuple[int, ...]]:
+    """kind literal -> donate tuple, from ``_step_for``'s dict."""
+    out = {}
+    for fn in core.functions(tree):
+        if fn.name != "_step_for":
+            continue
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Dict):
+                for k, v in zip(n.keys, n.values):
+                    if (isinstance(k, ast.Constant)
+                            and isinstance(v, ast.Name)
+                            and v.id in builders):
+                        out[k.value] = builders[v.id][1]
+    return out
+
+
+def _flat_stmts(fn: ast.FunctionDef) -> List[ast.stmt]:
+    """Every statement in the function, in source order, not descending
+    into nested function/class definitions."""
+    out: List[ast.stmt] = []
+
+    def visit(stmts):
+        for s in stmts:
+            out.append(s)
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(s, field, []))
+            for h in getattr(s, "handlers", []):
+                visit(h.body)
+
+    visit(fn.body)
+    return out
+
+
+def check(sf: core.SourceFile) -> List[core.Finding]:
+    builders = _builders(sf.tree)
+    kinds = _kind_table(sf.tree, builders)
+    inner_names = {}           # inner fn name -> default donate tuple
+    for name, donates in builders.values():
+        inner_names.setdefault(name, donates)
+    if not builders and not kinds:
+        return []
+    findings: List[core.Finding] = []
+    for fn in core.functions(sf.tree):
+        if fn.name.startswith("_make"):
+            continue            # builders define, not dispatch
+        donating: Dict[str, Tuple[int, ...]] = {
+            a: inner_names[a]
+            for a in core.arg_names(fn.args) if a in inner_names}
+        stmts = _flat_stmts(fn)
+        stmt_index = {}
+        for i, s in enumerate(stmts):
+            for n in ast.walk(s):
+                stmt_index.setdefault(id(n), i)
+        # pass 1: var = _step_for("kind") assignments refine the map
+        for s in stmts:
+            if (isinstance(s, ast.Assign) and isinstance(s.value, ast.Call)
+                    and core.dotted(s.value.func) == "_step_for"
+                    and len(s.targets) == 1
+                    and isinstance(s.targets[0], ast.Name)):
+                args = s.value.args
+                if (args and isinstance(args[0], ast.Constant)
+                        and args[0].value in kinds):
+                    donating[s.targets[0].id] = kinds[args[0].value]
+                else:
+                    donating.setdefault(
+                        s.targets[0].id,
+                        inner_names.get("step", (2,)))
+        # pass 2: flag reads of donated expressions after each call
+        for call in ast.walk(fn):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in donating):
+                continue
+            ci = stmt_index.get(id(call))
+            if ci is None:
+                continue        # inside a nested def: its own scope
+            for argnum in donating[call.func.id]:
+                if argnum >= len(call.args):
+                    continue
+                donated = call.args[argnum]
+                key = ast.dump(donated)
+                if core.dotted(donated) is None:
+                    continue    # not a trackable name/attr chain
+                findings.extend(_reads_after(
+                    sf, fn, stmt_index, ci, key,
+                    core.dotted(donated), call.func.id))
+    return findings
+
+
+def _reads_after(sf, fn, stmt_index, call_idx, key, label,
+                 callee) -> List[core.Finding]:
+    """Loads of ``key`` in statements after the call and before its
+    next rebinding.  A Store in the call's own statement
+    (``state, ... = step(..., state, ...)``) counts as the rebinding —
+    the canonical safe pattern."""
+    store_idx = None
+    loads = []
+    for n in ast.walk(fn):
+        if not isinstance(n, (ast.Name, ast.Attribute)):
+            continue
+        i = stmt_index.get(id(n))
+        if i is None or i < call_idx:
+            continue
+        d = ast.dump(n)
+        if isinstance(n.ctx, ast.Load):
+            if d == key and i > call_idx:
+                loads.append((i, n))
+        elif d.replace("Store()", "Load()").replace(
+                "Del()", "Load()") == key:
+            if store_idx is None or i < store_idx:
+                store_idx = i
+    out = []
+    for i, n in sorted(loads, key=lambda t: t[0]):
+        if store_idx is not None and i >= store_idx:
+            continue
+        out.append(sf.finding(
+            RULE, n,
+            f"{label!r} was donated to {callee!r} (donate_argnums) and "
+            f"is read before being rebound from the result", HINT))
+    return out

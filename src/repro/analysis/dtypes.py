@@ -1,0 +1,105 @@
+"""Rule ``dtype-drift``: kernel/device array code must pin dtypes.
+
+The device plane runs every array allocation under the ``_x64()``
+context; kernels may be entered with x64 on or off.  An un-annotated
+``jnp`` constructor (``jnp.asarray(host_array)``, ``jnp.arange(n)``,
+``jnp.zeros(shape)``) takes its dtype from the *mode*, not the code —
+exactly the drift PR 3's x64-proofing chased by hand.  Similarly a bare
+``np.int64`` / ``np.float64`` inside a jitted step body becomes a
+trace-time constant whose canonicalization flips with the mode.
+
+Scope: ``kernels/**`` plus ``dataflow/device.py``.  A constructor is
+annotated if it passes a ``dtype=`` keyword, a positional dtype
+argument, or derives the dtype from an input (``x.astype(...)``,
+``dtype=other.dtype``, ``*_like``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from . import core
+
+RULE = "dtype-drift"
+HINT = ("pass an explicit dtype (positional or dtype=); default dtypes "
+        "flip between x64 and x32 modes")
+HINT64 = ("use a 32-bit dtype or derive from an input array; bare "
+          "np.int64/np.float64 inside jitted code canonicalizes "
+          "mode-dependently")
+
+#: constructors whose second positional argument is the dtype.
+CTORS_DTYPE_POS2 = {"zeros", "ones", "empty", "array", "asarray"}
+#: constructors needing dtype= (positional slot is not 2nd).
+CTORS_DTYPE_KW = {"full", "arange", "linspace"}
+
+
+def applies(relpath: str) -> bool:
+    return ("/kernels/" in relpath
+            or relpath.endswith("dataflow/device.py"))
+
+
+def _ctor_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+            and f.value.id in ("jnp", "jax_numpy")):
+        return f.attr
+    return None
+
+
+def _annotated(call: ast.Call, name: str) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return True
+    if name in CTORS_DTYPE_POS2 and len(call.args) >= 2:
+        return True
+    if name == "full" and len(call.args) >= 3:
+        return True
+    if name == "arange" and len(call.args) >= 4:
+        return True
+    # dtype derived from the input: jnp.asarray(x.astype(...))
+    if (name in ("array", "asarray") and call.args
+            and isinstance(call.args[0], ast.Call)
+            and isinstance(call.args[0].func, ast.Attribute)
+            and call.args[0].func.attr == "astype"):
+        return True
+    return False
+
+
+def _jit_bodies(tree: ast.AST) -> List[ast.FunctionDef]:
+    from .captures import _is_jit_decorated
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef) and _is_jit_decorated(n)]
+
+
+def check(sf: core.SourceFile) -> List[core.Finding]:
+    findings: List[core.Finding] = []
+    for n in ast.walk(sf.tree):
+        if isinstance(n, ast.Call):
+            name = _ctor_name(n)
+            if (name in (CTORS_DTYPE_POS2 | CTORS_DTYPE_KW)
+                    and not _annotated(n, name)):
+                findings.append(sf.finding(
+                    RULE, n,
+                    f"un-annotated jnp.{name} call: result dtype "
+                    f"depends on the x64 mode", HINT))
+    # bare 64-bit numpy dtypes: kernels everywhere, device.py only
+    # inside jitted step bodies (host-side np.int64 dispatch scalars
+    # are the deliberate trace-signature pin).
+    in_kernels = "/kernels/" in sf.relpath
+    scopes = [sf.tree] if in_kernels else _jit_bodies(sf.tree)
+    seen = set()
+    for scope in scopes:
+        for n in ast.walk(scope):
+            if id(n) in seen:
+                continue
+            seen.add(id(n))
+            if (isinstance(n, ast.Attribute)
+                    and n.attr in ("int64", "float64")
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id == "np"):
+                findings.append(sf.finding(
+                    RULE, n,
+                    f"bare np.{n.attr} in "
+                    + ("a kernel module" if in_kernels
+                       else "a jitted step body"), HINT64))
+    return sorted(findings, key=lambda f: f.line)

@@ -1,0 +1,69 @@
+"""Rule ``unpaired-warning``: every ``warnings.warn`` in ``dataflow/``
+must pair with a structured ``Incident`` in the same function.
+
+PR 7's convention: a one-time ``RuntimeWarning`` tells a human; the
+paired :class:`~repro.dataflow.resilience.Incident` (on
+``engine.incidents`` or the process-wide ``resilience.GLOBAL``) tells
+the chaos harness, the tests and the recovery bench.  A warning with no
+incident is invisible to all three.
+
+Pairing is satisfied by a ``.record(...)`` call in the same function,
+or transitively by calling a demotion path (``demote`` /
+``deactivate``), which records its own incident.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from . import core
+
+RULE = "unpaired-warning"
+HINT = ("record a structured Incident next to the warning "
+        "(engine.incidents.record(...) or resilience.GLOBAL.record(...)"
+        "), or route through demote()/deactivate() which records one")
+
+#: method calls that transitively record an incident.
+RECORDING_CALLS = {"record", "demote", "deactivate"}
+
+
+def applies(relpath: str) -> bool:
+    return "/dataflow/" in relpath
+
+
+def _calls(scope: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(scope) if isinstance(n, ast.Call)]
+
+
+def _is_warn(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "warn":
+        return True
+    if isinstance(f, ast.Name) and f.id == "warn":
+        return True
+    return False
+
+
+def check(sf: core.SourceFile) -> List[core.Finding]:
+    findings: List[core.Finding] = []
+    scopes = list(core.functions(sf.tree)) or [sf.tree]
+    seen = set()
+    for fn in scopes:
+        calls = _calls(fn)
+        warns = [c for c in calls if _is_warn(c)]
+        if not warns:
+            continue
+        paired = any(
+            isinstance(c.func, ast.Attribute)
+            and c.func.attr in RECORDING_CALLS
+            for c in calls)
+        for w in warns:
+            if id(w) in seen:
+                continue
+            seen.add(id(w))
+            if not paired:
+                findings.append(sf.finding(
+                    RULE, w,
+                    "warnings.warn with no Incident recorded in the "
+                    "same function", HINT))
+    return findings

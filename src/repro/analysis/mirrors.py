@@ -1,0 +1,107 @@
+"""Rule ``mirror-write``: host mirrors may only be written at
+registered accounting sites.
+
+The device plane keeps exact host mirrors (queue ``lens``, cumulative
+``received``, ``rows_len``, worker ``processed_total`` /
+``emitted_total``, exchange ``tuples_sent`` / ``sent_per_worker``) fed
+from O(W) per-dispatch metrics; everything else materializes only at
+boundaries.  A mirror assignment anywhere else silently forks host and
+device truth — the next boundary sync then "restores" the wrong value.
+
+Scope: ``dataflow/device.py`` and ``dataflow/exchange.py`` (the modules
+that own mirrors).  Allowed writer functions per module are the
+constructors, the dispatch fold-metric sites, the materialization /
+restore boundaries, and the demotion back-out.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from . import core
+
+RULE = "mirror-write"
+HINT = ("update mirrors only from dispatched metrics (_dispatch/"
+        "_dispatch_chain/_append) or at materialization boundaries "
+        "(sync_host/on_restore/demote); anywhere else forks host and "
+        "device truth")
+
+#: the registered mirror attributes.
+MIRRORS = {"lens", "received", "rows_len", "sent_per_worker",
+           "tuples_sent", "processed_total", "emitted_total"}
+
+#: allowed writer functions, keyed by path suffix.
+ALLOWED = {
+    "dataflow/device.py": {
+        "__init__", "_load_host_state", "on_restore", "_dispatch",
+        "_dispatch_chain", "_append", "demote", "sync_host",
+        "sync_stats", "sync_sink_counts",
+    },
+    "dataflow/exchange.py": {"__init__", "send", "account"},
+}
+
+
+def applies(relpath: str) -> bool:
+    return any(relpath.endswith(suffix) for suffix in ALLOWED)
+
+
+def _targets(stmt: ast.stmt) -> List[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        out = []
+        for t in stmt.targets:
+            out.extend(t.elts if isinstance(t, (ast.Tuple, ast.List))
+                       else [t])
+        return out
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+def _mirror_attr(target: ast.AST) -> str:
+    """The mirror attribute a target writes, or '' (handles both
+    ``x.lens = ...`` and ``x.lens[i] = ...``)."""
+    if isinstance(target, ast.Subscript):
+        target = target.value
+    if isinstance(target, ast.Attribute) and target.attr in MIRRORS:
+        return target.attr
+    return ""
+
+
+def check(sf: core.SourceFile) -> List[core.Finding]:
+    allowed = set()
+    for suffix, names in ALLOWED.items():
+        if sf.relpath.endswith(suffix):
+            allowed = names
+            break
+    findings: List[core.Finding] = []
+    for fn in core.functions(sf.tree):
+        if fn.name in allowed:
+            continue
+        for n in _own_stmts(fn):
+            for t in _targets(n):
+                attr = _mirror_attr(t)
+                if attr:
+                    findings.append(sf.finding(
+                        RULE, t,
+                        f"mirror attribute {attr!r} written outside "
+                        f"the registered accounting sites (in "
+                        f"{fn.name!r})", HINT))
+    return findings
+
+
+def _own_stmts(fn: ast.AST) -> List[ast.stmt]:
+    """Statements belonging to ``fn`` itself (nested defs are their own
+    scopes and are checked under their own names)."""
+    out: List[ast.stmt] = []
+
+    def visit(n: ast.AST) -> None:
+        for c in ast.iter_child_nodes(n):
+            if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+                continue
+            if isinstance(c, ast.stmt):
+                out.append(c)
+            visit(c)
+
+    visit(fn)
+    return out

@@ -1,0 +1,85 @@
+"""Runtime sanitizers for the device plane (``REPRO_SANITIZE=1``).
+
+Three runtime counterparts to the static rules:
+
+* **retrace sentinel** (``sanitize-retrace``) — every jitted step body
+  calls :func:`note_step_trace` as its first statement.  The call runs
+  at *trace time* only (compiled executions never re-enter Python), so
+  it counts compilations per ``(kind, spec, arg-signature)`` key.  The
+  signature deliberately excludes dtypes' weak-type flags and keys on
+  shapes + treedef: a second trace of an identical key is exactly the
+  weak-type / closure drift the ``np.int64`` dispatch discipline
+  exists to prevent.  Under ``REPRO_SANITIZE=1`` it is a structured
+  incident on ``resilience.GLOBAL`` plus a hard failure; otherwise the
+  counter still advances (free — trace time only) so tests can pin
+  compile counts via :func:`trace_counts`.
+
+* **mirror cross-check** (``sanitize-mirror``) — at every
+  ``sync_host`` boundary the exact host mirrors are compared against
+  the materialized device truth (ring ``tail - head`` vs ``lens``,
+  ``rlen`` vs ``rows_len``).
+
+* **fold guards** (``sanitize-nan``) — fold-state sum accumulators are
+  scanned for NaN/inf at the same boundary.
+
+The checks live in ``dataflow/device.py`` (:meth:`DeviceOpRuntime.
+_sanitize_check`); this module owns the policy (enabled flag, counters,
+failure type) so the static analyzer stays importable without jax.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Tuple
+
+
+class SanitizeError(AssertionError):
+    """A device-plane invariant failed under REPRO_SANITIZE=1."""
+
+
+#: (kind, spec, signature) -> number of traces observed.
+_TRACES: Dict[Tuple, int] = {}
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def reset() -> None:
+    """Forget observed traces (pair with clearing ``_STEP_CACHE``:
+    a rebuilt jit wrapper legitimately retraces every key)."""
+    _TRACES.clear()
+
+
+def trace_counts() -> Dict[Tuple, int]:
+    return dict(_TRACES)
+
+
+def _signature(args) -> Tuple:
+    """Shapes + tree structure of the dynamic arguments.  Dtypes are
+    included but weak-type flags are not: weak-type drift on an
+    otherwise identical call is precisely the retrace bug hunted."""
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    sig = tuple((tuple(getattr(leaf, "shape", ())),
+                 str(getattr(leaf, "dtype", type(leaf).__name__)))
+                for leaf in leaves)
+    return (str(treedef), sig)
+
+
+def note_step_trace(kind: str, spec, args) -> None:
+    """Called from inside a jitted step body; executes once per trace."""
+    key = (kind, spec, _signature(args))
+    n = _TRACES.get(key, 0) + 1
+    _TRACES[key] = n
+    if n > 1 and enabled():
+        from ..dataflow import resilience
+        resilience.GLOBAL.record(
+            "sanitize-retrace", edge=str(kind),
+            cause=f"jitted {kind!r} step retraced (trace #{n}) for an "
+                  f"already-compiled spec/signature",
+            action="fail (REPRO_SANITIZE=1)")
+        raise SanitizeError(
+            f"sanitize-retrace: jitted {kind!r} step retraced (trace "
+            f"#{n}) for a spec/signature that already compiled — "
+            f"trace-cache key drift (weak types, unstable closure, or "
+            f"spec equality breakage)")

@@ -170,6 +170,40 @@ rings and maps; only the *summation order* of keyed float folds may
 differ from numpy's sequential weighted ``bincount`` (XLA scatter-add),
 which is why the engine's cross-plane contract is stated on
 ``Sink.series`` / ``Sink.counts`` (integers) and checkpoint counters.
+
+Invariants (machine-checked by ``repro.analysis``)
+--------------------------------------------------
+The conventions this plane depends on are enforced by the plane-contract
+analyzer (``python -m repro.analysis src/``, wired into tier-1 as
+``tests/test_analysis.py``) and, at runtime, by ``REPRO_SANITIZE=1``:
+
+``stale-capture``     jitted step bodies (the ``_make_step*`` /
+                      ``_make_ctrl_step`` closures) capture only
+                      parameters, spec fields and module constants —
+                      anything else is invisible to the trace-cache key
+                      and goes stale after the first trace.
+``donation-unsafe``   a donated state pytree (``donate_argnums``) is
+                      never read after the dispatch that donated it;
+                      the only safe pattern is rebind-from-the-result.
+``dtype-drift``       every ``jnp`` constructor here and in
+                      ``kernels/**`` pins its dtype explicitly, and no
+                      bare ``np.int64``/``float64`` appears inside a
+                      jitted body (host-side ``np.int64`` dispatch
+                      scalars are the deliberate trace-signature pin).
+``unpaired-warning``  every one-time ``RuntimeWarning`` pairs with a
+                      structured ``Incident`` (PR 7's convention).
+``mirror-write``      the exact host mirrors (``lens`` / ``received`` /
+                      ``rows_len`` / worker stats / exchange counters)
+                      are written only at the registered accounting
+                      sites: dispatch fold-metrics, materialization
+                      boundaries, restore and demotion back-out.
+
+Runtime sanitizers (``REPRO_SANITIZE=1``): a retrace sentinel asserts
+each ``StepSpec`` compiles exactly once per process
+(``sanitize-retrace`` incident + failure on drift), and every
+``sync_host`` boundary cross-checks mirrors against materialized device
+truth (``sanitize-mirror``) and guards fold sums against NaN/inf
+(``sanitize-nan``).
 """
 from __future__ import annotations
 
@@ -179,6 +213,7 @@ from typing import Callable, List, Optional, Union
 
 import numpy as np
 
+from ..analysis import sanitize as _sanitize
 from .resilience import InjectedDispatchFault
 from .tuples import Chunk, ring_span
 
@@ -204,6 +239,16 @@ MAX_EMIT_CELLS = 1 << 22
 def _jnp():
     import jax.numpy as jnp
     return jnp
+
+
+def _note_trace(kind, spec, args) -> None:
+    """Retrace sentinel: first statement of every jitted step body, so
+    it executes exactly once per *trace* (compiled executions never
+    re-enter Python).  The sanitizer counts compilations per
+    (kind, spec, arg-signature); under ``REPRO_SANITIZE=1`` a second
+    trace of an already-compiled key is a ``sanitize-retrace`` incident
+    plus a hard failure (rule id: sanitize-retrace)."""
+    _sanitize.note_step_trace(kind, spec, args)
 
 
 def _x64():
@@ -538,6 +583,7 @@ def _make_step_fold():
 
     @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
     def step(spec: StepSpec, consts, state, chunk, budget):
+        _note_trace("fold", spec, (consts, state, chunk, budget))
         jnp = _jnp()
         if chunk is not None:
             state, hist = _ingest(spec, consts, state, chunk)
@@ -558,6 +604,7 @@ def _make_step_map():
 
     @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
     def step(spec: StepSpec, consts, state, chunk, budget):
+        _note_trace("map", spec, (consts, state, chunk, budget))
         jnp = _jnp()
         if chunk is not None:
             state, hist = _ingest(spec, consts, state, chunk)
@@ -586,6 +633,7 @@ def _make_step_chain():
 
     @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
     def step(specs, consts_t, states_t, chunk, budgets):
+        _note_trace("chain", specs, (consts_t, states_t, chunk, budgets))
         jnp = _jnp()
         states = list(states_t)
         metrics = []
@@ -646,6 +694,7 @@ def _make_step_sink():
 
     @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
     def step(spec: StepSpec, consts, state, chunk):
+        _note_trace("sink", spec, (consts, state, chunk))
         jnp = _jnp()
         keys, vals, valid = chunk
         state = _fold_stats(spec, state, keys, valid)
@@ -747,9 +796,11 @@ def _make_ctrl_step():
 
     @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
     def ctrl_step(cs: CtrlSpec, c, arrived, phi, t0, k, tuples_left, rate):
+        _note_trace("ctrl", cs, (c, arrived, phi, t0, k,
+                                 tuples_left, rate))
         i32 = jnp.int32
         W = cs.W
-        idx = jnp.arange(W)
+        idx = jnp.arange(W, dtype=jnp.int64)
         BIG = jnp.iinfo(jnp.int32).max
 
         def est_stats(c, w):
@@ -1187,18 +1238,19 @@ class DeviceController:
         with _x64():
             rt._refresh_consts(force=True)
             self.cstate = dict(
-                weights=jnp.asarray(table.weights.copy()),
+                weights=jnp.asarray(table.weights.copy(), jnp.float64),
                 cdf=rt.consts["cdf"], primary=rt.consts["primary"],
                 is_split=rt.consts["is_split"], owner=rt.consts["owner"],
-                obs=jnp.asarray(obs), obs_n=jnp.asarray(obs_n),
-                obs_pos=jnp.asarray(obs_pos),
+                obs=jnp.asarray(obs, jnp.float64),
+                obs_n=jnp.asarray(obs_n, jnp.int32),
+                obs_pos=jnp.asarray(obs_pos, jnp.int32),
                 tau=jnp.asarray(float(host.tau), jnp.float64),
                 tau_adj=jnp.asarray(int(host.tau_adjustments), jnp.int32),
-                mit_active=jnp.asarray(mit_active),
-                mit_helper=jnp.asarray(mit_helper),
-                mit_phase=jnp.asarray(mit_phase),
-                mit_calm=jnp.asarray(mit_calm),
-                mit_seq=jnp.asarray(mit_seq),
+                mit_active=jnp.asarray(mit_active, bool),
+                mit_helper=jnp.asarray(mit_helper, jnp.int32),
+                mit_phase=jnp.asarray(mit_phase, jnp.int32),
+                mit_calm=jnp.asarray(mit_calm, jnp.int32),
+                mit_seq=jnp.asarray(mit_seq, jnp.int32),
                 seq_next=jnp.asarray(len(host.mitigations), jnp.int32),
                 epoch=jnp.asarray(0, jnp.int32),
                 log_phi=jnp.zeros((self.LOG_CAP, rt.W), jnp.float64),
@@ -1242,7 +1294,7 @@ class DeviceController:
         with _x64():
             arrived = (rt.state["arrived"] if rt.state is not None
                        else jnp.zeros(rt.K, jnp.int64))
-            phi = jnp.asarray(rt.workloads())
+            phi = jnp.asarray(rt.workloads(), jnp.float64)
             c, drained = step(self.spec, self.cstate, arrived, phi,
                               np.int64(t0), np.int64(k),
                               np.float64(left), np.float64(rate))
@@ -1316,10 +1368,10 @@ class DeviceController:
                     action="host wins; device consts re-uploaded")
                 self.cstate = dict(
                     self.cstate,
-                    weights=jnp.asarray(table.weights.copy()),
+                    weights=jnp.asarray(table.weights.copy(), jnp.float64),
                     cdf=jnp.asarray(table.cdf32, jnp.float32),
-                    primary=jnp.asarray(table._primary),
-                    is_split=jnp.asarray(table._is_split))
+                    primary=jnp.asarray(table._primary, jnp.int64),
+                    is_split=jnp.asarray(table._is_split, bool))
             self.cstate = dict(self.cstate,
                                log_n=jnp.asarray(0, jnp.int32))
         rt.consts = dict(cdf=self.cstate["cdf"],
@@ -1622,8 +1674,9 @@ class DeviceOpRuntime:
         pv[:n] = vals
         m[:n] = True
         with _x64():
-            return DeviceChunk(jnp.asarray(pk), jnp.asarray(pv),
-                               jnp.asarray(m), n)
+            return DeviceChunk(jnp.asarray(pk, jnp.int64),
+                               jnp.asarray(pv, jnp.float64),
+                               jnp.asarray(m, bool), n)
 
     # ---- device state lifecycle --------------------------------------- #
     def _alloc_state(self) -> None:
@@ -1683,19 +1736,26 @@ class DeviceOpRuntime:
                     self.lens[w] = ln
                     self.received[w] = worker.queue.received_total
                 self.state.update(
-                    rk=jnp.asarray(rk), rv=jnp.asarray(rv),
+                    rk=jnp.asarray(rk, jnp.int64),
+                    rv=jnp.asarray(rv, jnp.float64),
                     head=jnp.zeros(self.W, jnp.int64),
-                    tail=jnp.asarray(self.lens.copy()))
+                    tail=jnp.asarray(self.lens.copy(), jnp.int64))
             if self.kind == "fold":
                 own = [w.state.export_dense() for w in op.workers]
                 scat = [w.scattered.export_dense() for w in op.workers]
                 self.state.update(
-                    counts=jnp.asarray(np.stack([o[0] for o in own])),
-                    sums=jnp.asarray(np.stack([o[1] for o in own])),
-                    present=jnp.asarray(np.stack([o[2] for o in own])),
-                    scat_counts=jnp.asarray(np.stack([s[0] for s in scat])),
-                    scat_sums=jnp.asarray(np.stack([s[1] for s in scat])),
-                    scat_present=jnp.asarray(np.stack([s[2] for s in scat])))
+                    counts=jnp.asarray(
+                        np.stack([o[0] for o in own]), jnp.int64),
+                    sums=jnp.asarray(
+                        np.stack([o[1] for o in own]), jnp.float64),
+                    present=jnp.asarray(
+                        np.stack([o[2] for o in own]), bool),
+                    scat_counts=jnp.asarray(
+                        np.stack([s[0] for s in scat]), jnp.int64),
+                    scat_sums=jnp.asarray(
+                        np.stack([s[1] for s in scat]), jnp.float64),
+                    scat_present=jnp.asarray(
+                        np.stack([s[2] for s in scat]), bool))
             if self.kind == "probe":
                 # Dense match table: owned + scattered build rows SUMMED
                 # per (worker, key) — a split build key may hold rows in
@@ -1704,7 +1764,7 @@ class DeviceOpRuntime:
                 mc = np.stack([np.asarray(w.state.counts)
                                + np.asarray(w.scattered.counts)
                                for w in op.workers])
-                self.state["mcounts"] = jnp.asarray(mc)
+                self.state["mcounts"] = jnp.asarray(mc, jnp.int64)
                 self.M = max(int(mc.max(initial=1)), 1)
             if self.kind == "rows":
                 need = max(int(w.state.total_rows()
@@ -1725,12 +1785,15 @@ class DeviceOpRuntime:
                     bk[w, n1:n1 + n2] = sc_k
                     bv[w, n1:n1 + n2] = sc_v
                     self.rows_len[w] = n1 + n2
-                self.state.update(bk=jnp.asarray(bk), bv=jnp.asarray(bv),
-                                  bo=jnp.asarray(bo),
-                                  rlen=jnp.asarray(self.rows_len.copy()))
+                self.state.update(
+                    bk=jnp.asarray(bk, jnp.int64),
+                    bv=jnp.asarray(bv, jnp.float64),
+                    bo=jnp.asarray(bo, bool),
+                    rlen=jnp.asarray(self.rows_len.copy(), jnp.int64))
             if self.kind == "sink":
-                self.state.update(counts=jnp.asarray(op.counts.copy()),
-                                  sums=jnp.asarray(op.sums.copy()))
+                self.state.update(
+                    counts=jnp.asarray(op.counts.copy(), jnp.int64),
+                    sums=jnp.asarray(op.sums.copy(), jnp.float64))
                 # The received mirror is stage-accounted and already
                 # correct on every path into here (mid-run staging, or
                 # ``on_restore`` which read the restored queue) — do NOT
@@ -1792,9 +1855,11 @@ class DeviceOpRuntime:
             new_k[w, :ln] = rk_np[w, idx]
             new_v[w, :ln] = rv_np[w, idx]
         with _x64():
-            self.state.update(rk=jnp.asarray(new_k), rv=jnp.asarray(new_v),
+            self.state.update(rk=jnp.asarray(new_k, jnp.int64),
+                              rv=jnp.asarray(new_v, jnp.float64),
                               head=jnp.zeros(self.W, jnp.int64),
-                              tail=jnp.asarray(self.lens.copy()))
+                              tail=jnp.asarray(self.lens.copy(),
+                                               jnp.int64))
 
     def _regrow_rowstore(self) -> None:
         """Re-layout the flat row log at a larger capacity (append-only:
@@ -1811,8 +1876,9 @@ class DeviceOpRuntime:
         new_v[:, :old] = bv
         new_o[:, :old] = bo
         with _x64():
-            self.state.update(bk=jnp.asarray(new_k), bv=jnp.asarray(new_v),
-                              bo=jnp.asarray(new_o))
+            self.state.update(bk=jnp.asarray(new_k, jnp.int64),
+                              bv=jnp.asarray(new_v, jnp.float64),
+                              bo=jnp.asarray(new_o, bool))
 
     # ---- routing constants / split counters --------------------------- #
     def _refresh_consts(self, force: bool = False) -> None:
@@ -1831,9 +1897,9 @@ class DeviceOpRuntime:
             with _x64():
                 self.consts = dict(
                     cdf=jnp.asarray(rt.cdf32, jnp.float32),
-                    primary=jnp.asarray(rt._primary),
-                    is_split=jnp.asarray(rt._is_split),
-                    owner=jnp.asarray(rt.owner.copy()))
+                    primary=jnp.asarray(rt._primary, jnp.int64),
+                    is_split=jnp.asarray(rt._is_split, bool),
+                    owner=jnp.asarray(rt.owner.copy(), jnp.int64))
             self._consts_version = rt.version
             self._consts_split = bool(rt._any_split)
 
@@ -1846,7 +1912,8 @@ class DeviceOpRuntime:
             rt.sync_counters()          # a previous owner's last word
             jnp = _jnp()
             with _x64():
-                self.state["count"] = jnp.asarray(rt._count.copy())
+                self.state["count"] = jnp.asarray(rt._count.copy(),
+                                                  jnp.int64)
             rt._count_owner = self._pull
 
     # ---- the fused super-tick dispatch -------------------------------- #
@@ -1909,6 +1976,8 @@ class DeviceOpRuntime:
             chunks, self.staged, self.staged_live = self.staged, [], 0
             return self._dispatch(_step_for(self.kind), self._spec(),
                                   chunks, budget)
+        except _sanitize.SanitizeError:
+            raise               # never masked as a host-path demotion
         except Exception as exc:
             if self._dispatched:
                 raise
@@ -2081,6 +2150,8 @@ class DeviceOpRuntime:
                 states_t, out, metrics = step(
                     specs, consts_t, states_t, dc,
                     tuple(np.int64(b) for b in budgets))
+        except _sanitize.SanitizeError:
+            raise               # never masked as a per-edge fallback
         except Exception as exc:
             if all(r._dispatched for r in members):
                 raise
@@ -2315,7 +2386,48 @@ class DeviceOpRuntime:
             op.workers[0].queue.restore((k, v), int(self.received[0]))
         self.sync_stats()
         self.routing.sync_counters()
+        if _sanitize.enabled():
+            self._sanitize_check()
         self._host_fresh = True
+
+    def _sanitize_check(self) -> None:
+        """Boundary sanitizers (``REPRO_SANITIZE=1``): cross-check the
+        exact host mirrors against materialized device truth and guard
+        fold sums against NaN/inf.  Violations are structured incidents
+        (``sanitize-mirror`` / ``sanitize-nan``) plus a hard failure."""
+        if self.state is None:
+            return
+        problems = []
+        if self.kind != "sink":
+            dev = (np.asarray(self.state["tail"])
+                   - np.asarray(self.state["head"]))
+            if not np.array_equal(dev, self.lens):
+                problems.append((
+                    "sanitize-mirror",
+                    f"queue-length mirror {self.lens.tolist()} != device "
+                    f"tail-head {dev.tolist()}"))
+        if self.kind == "rows":
+            rlen = np.asarray(self.state["rlen"])
+            if not np.array_equal(rlen, self.rows_len):
+                problems.append((
+                    "sanitize-mirror",
+                    f"rows_len mirror {self.rows_len.tolist()} != device "
+                    f"rlen {rlen.tolist()}"))
+        for name in ("sums", "scat_sums"):
+            if name in self.state:
+                if not np.isfinite(np.asarray(self.state[name])).all():
+                    problems.append((
+                        "sanitize-nan",
+                        f"non-finite values in fold state {name!r}"))
+        for kind, cause in problems:
+            self.engine.incidents.record(
+                kind, tick=self.engine.tick, edge=self.op.name,
+                cause=cause, action="fail (REPRO_SANITIZE=1)")
+        if problems:
+            raise _sanitize.SanitizeError(
+                f"device-plane sanitizer tripped at a sync_host "
+                f"boundary on {self.op.name!r}: "
+                + "; ".join(c for _, c in problems))
 
     def mark_state_stale(self) -> None:
         """The host copies were mutated (migration / merge / restore):

@@ -148,7 +148,8 @@ def match_expand(wk: jnp.ndarray, wv: jnp.ndarray, wmask: jnp.ndarray,
     keep [W, E])``.
     """
     W, B = wk.shape
-    m = jnp.where(wmask, mcounts[jnp.arange(W)[:, None], wk], 0)
+    m = jnp.where(wmask,
+                  mcounts[jnp.arange(W, dtype=jnp.int32)[:, None], wk], 0)
     csum = jnp.cumsum(m, axis=1)                       # [W, B] inclusive
     total = csum[:, -1]
     iot = jnp.arange(emit_width, dtype=csum.dtype)
@@ -281,7 +282,7 @@ def saturated_cdf32_seq(weights: jnp.ndarray) -> jnp.ndarray:
     cdf = jnp.stack(cols, axis=1)
     last = (num_workers - 1
             - jnp.argmax((weights > 0)[:, ::-1], axis=1))
-    idx = jnp.arange(num_workers)
+    idx = jnp.arange(num_workers, dtype=jnp.int32)
     return jnp.where(idx[None, :] >= last[:, None], jnp.float32(1.0), cdf)
 
 

@@ -1,0 +1,355 @@
+"""Plane-contract analyzer tests (``repro.analysis``).
+
+Two halves, matching the subsystem:
+
+* **static** — every rule catches a seeded violation in a synthetic
+  fixture (and stays quiet on the paired clean code), the count-based
+  baseline suppresses exactly what it names and expires when the code
+  changes, and the repo itself is clean against the committed
+  ``analysis-baseline.json`` (this is the tier-1 gate the CLI mirrors).
+
+* **runtime** — the ``REPRO_SANITIZE=1`` sanitizers: the retrace
+  sentinel counts one compilation per ``(kind, spec, signature)`` on a
+  full W1 jit-plane run and fails on a duplicate trace; the boundary
+  cross-check trips on a forked mirror and a NaN'd fold sum with
+  structured ``sanitize-*`` incidents; and an armed, fused, sanitized
+  W1 run finishes clean and bit-identical to the numpy plane.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import Baseline, analyze
+from repro.analysis import captures, core, donation, dtypes, incidents, \
+    mirrors, sanitize
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+BASELINE = os.path.join(REPO, "analysis-baseline.json")
+
+
+def _fixture(tmp_path, rel, src):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return str(p)
+
+
+def _check(rule, path):
+    sf = core.parse_file(path)
+    assert rule.applies(sf.relpath)
+    return rule.check(sf)
+
+
+# --------------------------------------------------------------------- #
+# static rules: one seeded violation (+ paired clean code) per rule      #
+# --------------------------------------------------------------------- #
+class TestStaticRules:
+    def test_stale_capture(self, tmp_path):
+        path = _fixture(tmp_path, "dataflow/steps.py", """\
+            import jax
+
+            def _make_step_fold(spec, nb):
+                scale = nb * 2
+                limit = 4
+                @jax.jit
+                def step(consts, state, chunk):
+                    return state, scale + nb + limit   # scale, nb stale
+                return step
+            """)
+        found = _check(captures, path)
+        assert sorted(f.message.split("'")[5] for f in found) == \
+            ["nb", "scale"]
+        assert all(f.rule == "stale-capture" for f in found)
+        # limit is a literal constant binding: allowed, not reported.
+
+    def test_donation_unsafe(self, tmp_path):
+        path = _fixture(tmp_path, "dataflow/steps.py", """\
+            from functools import partial
+            import jax
+
+            def _make_step_fold(spec):
+                @partial(jax.jit, donate_argnums=(1,))
+                def step(consts, state, chunk):
+                    return state
+                return step
+
+            def _step_for(kind):
+                return {"fold": _make_step_fold}[kind]
+
+            def dispatch_bad(consts, state, chunk):
+                step = _step_for("fold")
+                out = step(consts, state, chunk)
+                return state["tail"]        # read after donation
+
+            def dispatch_ok(consts, state, chunk):
+                step = _step_for("fold")
+                state = step(consts, state, chunk)
+                return state["tail"]        # rebound from the result
+            """)
+        found = _check(donation, path)
+        assert len(found) == 1
+        assert found[0].rule == "donation-unsafe"
+        assert "'state'" in found[0].message
+        assert "dispatch_ok" not in found[0].message
+
+    def test_dtype_drift_kernels(self, tmp_path):
+        path = _fixture(tmp_path, "kernels/alloc.py", """\
+            import jax.numpy as jnp
+            import numpy as np
+
+            def alloc(n):
+                a = jnp.zeros(n)                    # drift
+                b = jnp.arange(n)                   # drift
+                c = np.int64(n)                     # bare 64-bit
+                d = jnp.zeros(n, jnp.int32)
+                e = jnp.arange(n, dtype=jnp.int32)
+                f = jnp.asarray(a.astype(jnp.int32))
+                return a, b, c, d, e, f
+            """)
+        found = _check(dtypes, path)
+        assert [f.line for f in found] == [5, 6, 7]
+        assert all(f.rule == "dtype-drift" for f in found)
+
+    def test_dtype_drift_device_scoping(self, tmp_path):
+        # host-side np.int64 dispatch scalars are the deliberate
+        # trace-signature pin; inside a jitted body they're drift.
+        path = _fixture(tmp_path, "dataflow/device.py", """\
+            import jax
+            import numpy as np
+
+            def host_dispatch(b):
+                return np.int64(b)                  # allowed: host pin
+
+            def _make_step_fold(spec):
+                @jax.jit
+                def step(state):
+                    return state + np.int64(1)      # drift in trace
+                return step
+            """)
+        found = _check(dtypes, path)
+        assert len(found) == 1
+        assert found[0].line == 10
+        assert "jitted step body" in found[0].message
+
+    def test_unpaired_warning(self, tmp_path):
+        path = _fixture(tmp_path, "dataflow/exchange.py", """\
+            import warnings
+
+            def spill_bad(self):
+                warnings.warn("spilling", RuntimeWarning)
+
+            def spill_paired(self):
+                warnings.warn("spilling", RuntimeWarning)
+                self.incidents.record("spill", cause="ring full")
+
+            def spill_demotes(self):
+                warnings.warn("demoting", RuntimeWarning)
+                self.demote("ring full")
+            """)
+        found = _check(incidents, path)
+        assert len(found) == 1
+        assert found[0].rule == "unpaired-warning"
+        assert found[0].line == 4
+
+    def test_mirror_write(self, tmp_path):
+        path = _fixture(tmp_path, "dataflow/device.py", """\
+            class Runtime:
+                def __init__(self):
+                    self.lens = [0]
+
+                def tick(self):
+                    self.lens[0] = 1                # forked mirror
+                    self.rows_len, x = None, 0      # forked mirror
+
+                def sync_host(self):
+                    self.lens = [2]                 # registered site
+            """)
+        found = _check(mirrors, path)
+        assert sorted(f.message.split("'")[1] for f in found) == \
+            ["lens", "rows_len"]
+        assert all("'tick'" in f.message for f in found)
+
+
+# --------------------------------------------------------------------- #
+# baseline mechanics + the committed repo gate                          #
+# --------------------------------------------------------------------- #
+class TestBaseline:
+    def test_baseline_suppresses_then_expires(self, tmp_path):
+        path = _fixture(tmp_path, "kernels/alloc.py", """\
+            import jax.numpy as jnp
+
+            def alloc(n):
+                return jnp.zeros(n)
+            """)
+        found = _check(dtypes, path)
+        assert len(found) == 1
+        bl = tmp_path / "baseline.json"
+        Baseline.save(str(bl), found, why="test fixture")
+        new, suppressed = Baseline.load(str(bl)).filter(found)
+        assert new == [] and suppressed == found
+        # the same finding on a *changed* source line expires the entry
+        import dataclasses
+        moved = dataclasses.replace(found[0],
+                                    snippet="return jnp.zeros(n + 1)")
+        new, suppressed = Baseline.load(str(bl)).filter([moved])
+        assert new == [moved] and suppressed == []
+
+    def test_baseline_count_budget(self, tmp_path):
+        f = core.Finding(rule="dtype-drift", file="kernels/a.py", line=3,
+                         message="m", hint="h", snippet="jnp.zeros(n)")
+        bl = tmp_path / "baseline.json"
+        Baseline.save(str(bl), [f], why="one allowed")
+        new, suppressed = Baseline.load(str(bl)).filter([f, f])
+        assert len(suppressed) == 1 and len(new) == 1
+
+    def test_repo_is_clean_against_committed_baseline(self):
+        new, _ = analyze([SRC], baseline=Baseline.load(BASELINE))
+        assert new == [], "\n".join(f.format() for f in new)
+
+    def test_cli_gate(self, tmp_path):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src"))
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", SRC,
+             "--baseline", BASELINE],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 finding(s)" in r.stdout
+        # findings drive the exit code
+        bad = _fixture(tmp_path, "kernels/alloc.py", """\
+            import jax.numpy as jnp
+
+            def alloc(n):
+                return jnp.zeros(n)
+            """)
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", bad],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert r.returncode == 1
+        assert "[dtype-drift]" in r.stdout and "hint:" in r.stdout
+
+
+# --------------------------------------------------------------------- #
+# runtime sanitizers (REPRO_SANITIZE=1)                                 #
+# --------------------------------------------------------------------- #
+def _monitored_jit(n=2500, num_keys=24, num_workers=4, chunk=8,
+                   batch_ticks=4, seed=0):
+    from repro.core import ReshapeConfig
+    from repro.dataflow.engine import Engine, Source
+    from repro.dataflow.operators import GroupByAgg, Sink
+    rng = np.random.default_rng(seed)
+    keys = np.minimum(rng.zipf(1.3, n) - 1, num_keys - 1).astype(np.int64)
+    vals = rng.uniform(0.0, 10.0, n)
+    eng = Engine(partition_backend="pallas", device_executor="jit",
+                 batch_ticks=batch_ticks)
+    src = eng.add_source(Source("src", keys, vals, num_workers * chunk))
+    grp = eng.add_op(GroupByAgg("groupby", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", num_keys, snapshot_every=batch_ticks))
+    eng.connect(src, grp, num_keys)
+    eng.connect(grp, sink, num_keys)
+    eng.attach_controller(grp, ReshapeConfig(metric_period=4))
+    return eng, grp
+
+
+class TestSanitizers:
+    def test_retrace_sentinel_counts_and_fails(self, monkeypatch):
+        pytest.importorskip("jax")
+        from repro.dataflow import resilience
+        sanitize.reset()
+        n0 = resilience.GLOBAL.count("sanitize-retrace")
+        args = (np.zeros(3, np.int32), {"t": np.ones((2, 2))})
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        sanitize.note_step_trace("fold", ("spec", 1), args)
+        assert list(sanitize.trace_counts().values()) == [1]
+        # disabled: a duplicate trace counts but stays silent
+        sanitize.note_step_trace("fold", ("spec", 1), args)
+        assert list(sanitize.trace_counts().values()) == [2]
+        assert resilience.GLOBAL.count("sanitize-retrace") == n0
+        # distinct signature = distinct key, never a retrace
+        sanitize.note_step_trace("fold", ("spec", 1),
+                                 (np.zeros(4, np.int32), args[1]))
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        with pytest.raises(sanitize.SanitizeError, match="retraced"):
+            sanitize.note_step_trace("fold", ("spec", 1), args)
+        assert resilience.GLOBAL.count("sanitize-retrace") == n0 + 1
+        sanitize.reset()
+
+    def test_w1_jit_plane_compiles_each_step_once(self):
+        """Regression (satellite): a multi-super-tick W1 run on the jit
+        plane traces every ``(kind, spec, signature)`` exactly once —
+        any count > 1 is a trace-cache key leak."""
+        pytest.importorskip("jax")
+        from repro.dataflow import build_w1, device
+        device._STEP_CACHE.clear()
+        sanitize.reset()
+        wf = build_w1(strategy="reshape", scale=0.005, num_workers=6,
+                      service_rate=4, batch_ticks=4, snapshot_every=2,
+                      partition_backend="pallas", device_executor="jit")
+        wf.run()
+        counts = sanitize.trace_counts()
+        assert counts, "retrace sentinel saw no traces"
+        retraced = {k[0]: v for k, v in counts.items() if v > 1}
+        assert retraced == {}
+
+    def test_sanitize_mirror_trips(self, monkeypatch):
+        pytest.importorskip("jax")
+        eng, grp = _monitored_jit()
+        eng.run_super_tick(4)
+        dev = grp.device
+        assert dev is not None and dev.state is not None
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        dev.lens[0] += 1                    # fork the host mirror
+        dev._host_fresh = False
+        with pytest.raises(sanitize.SanitizeError, match="sanitize"):
+            dev.sync_host()
+        assert eng.incidents.count("sanitize-mirror") >= 1
+
+    def test_sanitize_nan_trips(self, monkeypatch):
+        pytest.importorskip("jax")
+        eng, grp = _monitored_jit()
+        eng.run_super_tick(4)
+        dev = grp.device
+        assert dev is not None and dev.state is not None
+        assert "sums" in dev.state
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        dev.state["sums"] = dev.state["sums"].at[0].set(float("nan"))
+        dev._host_fresh = False
+        with pytest.raises(sanitize.SanitizeError, match="sanitize"):
+            dev.sync_host()
+        assert eng.incidents.count("sanitize-nan") >= 1
+
+    def test_w1_sanitized_armed_run_clean(self, monkeypatch):
+        """Acceptance: REPRO_SANITIZE=1 over the full device plane — W1,
+        armed in-dispatch controller, fused chains — finishes with zero
+        sanitize incidents and stays bit-identical to the numpy plane."""
+        pytest.importorskip("jax")
+        from repro.dataflow import build_w1, device, resilience
+        device._STEP_CACHE.clear()
+        sanitize.reset()
+        g0 = {k: v for k, v in resilience.GLOBAL.kinds().items()
+              if k.startswith("sanitize")}
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        kw = dict(strategy="reshape", scale=0.005, num_workers=6,
+                  service_rate=4, batch_ticks=4, snapshot_every=2)
+        a = build_w1(**kw)
+        a.run()
+        b = build_w1(partition_backend="pallas", device_executor="jit",
+                     device_controller=True, **kw)
+        b.run()
+        assert [e.device_plane for e in b.engine.edges] == \
+            ["jit", "jit", "jit"]
+        assert not [k for k in b.engine.incidents.kinds()
+                    if k.startswith("sanitize")]
+        g1 = {k: v for k, v in resilience.GLOBAL.kinds().items()
+              if k.startswith("sanitize")}
+        assert g1 == g0
+        assert a.engine.tick == b.engine.tick
+        assert len(a.sink.series) == len(b.sink.series)
+        assert all(t1 == t2 and np.array_equal(c1, c2)
+                   for (t1, c1), (t2, c2) in zip(a.sink.series,
+                                                 b.sink.series))

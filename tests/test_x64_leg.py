@@ -1,0 +1,50 @@
+"""``JAX_ENABLE_X64=1`` tier-1 leg.
+
+The device plane wraps its own allocations in the ``_x64()`` context and
+pins every constructor dtype (rule ``dtype-drift``), so flipping the
+*global* x64 mode must change nothing: kernels stay bit-identical and
+the fused jit plane still matches the numpy host plane.  This leg runs
+the kernel suite plus a device-plane slice in a subprocess with
+``JAX_ENABLE_X64=1`` — the mode is process-wide and must not leak into
+the main pytest process.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytest.importorskip("jax")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: device-plane slice: full-W1 equivalence, the basic fold pipeline and
+#: chain fusion cover every step builder without re-running the 2-minute
+#: file under both modes.
+DEVICE_SUBSET = [
+    "tests/test_device_plane.py::TestJitPlaneEquivalence"
+    "::test_fold_pipeline_bit_identical",
+    "tests/test_device_plane.py::TestJitPlaneEquivalence"
+    "::test_w1_full_device_plane_matches_numpy",
+    "tests/test_device_plane.py::TestChainFusion"
+    "::test_chain_bit_identical_and_placements_drop",
+]
+
+
+def _run_x64(targets, timeout=900):
+    env = dict(os.environ, JAX_ENABLE_X64="1",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-x", *targets],
+        capture_output=True, text=True, env=env, cwd=REPO,
+        timeout=timeout)
+
+
+def test_kernels_under_x64():
+    r = _run_x64(["tests/test_kernels.py"])
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
+
+
+def test_device_plane_subset_under_x64():
+    r = _run_x64(DEVICE_SUBSET)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
