@@ -1,0 +1,146 @@
+"""Spill-tier bench: throughput vs watermark, prefetch hit rate, and
+pressure-triggered mitigation latency (out-of-core memory tiering).
+
+Three row families in ``results/bench/spill.csv``:
+
+* ``throughput`` — W3 (range sort: both ring and row-store spill) on the
+  jit plane under shrinking budgets and different high/low watermarks,
+  vs the unspilled baseline: tuples/sec, bit-identity check, spill
+  traffic (evictions / refills / rows spilled) and the prefetch hit
+  rate of the double-buffered re-upload path.
+* ``pressure`` — how often the structured ``mem-pressure`` signal fired
+  and how many events the attached controller consumed.
+* ``mitigation-latency`` — ticks from the first ``mem-pressure``
+  incident to the first controller round that consumed it, with the
+  scheduled metric grid vs ``ReshapeConfig(pressure_rounds=True)``
+  (eager detection round on pressure).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ReshapeConfig
+from repro.dataflow.spill import SpillConfig
+from repro.dataflow.workflows import build_w3
+
+from . import common
+
+try:
+    import jax  # noqa: F401
+    HAS_JAX = True
+except Exception:                                   # pragma: no cover
+    HAS_JAX = False
+
+KEYS = ["case", "plane", "budget_cells", "high_wm", "low_wm",
+        "pressure_rounds", "seconds", "tuples_per_sec", "identical",
+        "demotions", "mem_pressure", "pressure_consumed",
+        "evictions", "refills", "rows_spilled",
+        "prefetch_hits", "prefetch_misses", "prefetch_hit_rate",
+        "latency_ticks"]
+
+
+def _series_equal(a, b):
+    return (len(a) == len(b)
+            and all(t1 == t2 and np.array_equal(c1, c2)
+                    for (t1, c1), (t2, c2) in zip(a, b)))
+
+
+def _spill_stats(eng):
+    agg = dict(evictions=0, refills=0, rows_spilled=0,
+               prefetch_hits=0, prefetch_misses=0)
+    for op in eng.ops:
+        sp = getattr(getattr(op, "device", None), "spill", None)
+        if sp is None:
+            continue
+        for k in agg:
+            agg[k] += getattr(sp, k)
+    total = agg["prefetch_hits"] + agg["prefetch_misses"]
+    agg["prefetch_hit_rate"] = (
+        round(agg["prefetch_hits"] / total, 3) if total else "")
+    return agg
+
+
+def _w3(n_tuples, budget, cfg=None, **kw):
+    return build_w3(strategy="reshape", n_tuples=n_tuples,
+                    partition_backend="pallas", device_executor="jit",
+                    device_controller=True, device_budget=budget,
+                    cfg=cfg, **kw)
+
+
+def _throughput_rows(n_tuples):
+    wf0 = _w3(n_tuples, None)
+    with common.Timer() as t0:
+        wf0.run()
+    base = wf0.sink.series
+    rows = [dict(case="throughput", plane="jit", budget_cells="",
+                 high_wm="", low_wm="", pressure_rounds="",
+                 seconds=round(t0.s, 3),
+                 tuples_per_sec=int(n_tuples / max(t0.s, 1e-9)),
+                 identical=1, demotions=0, mem_pressure=0,
+                 pressure_consumed=0, latency_ticks="",
+                 **{k: "" for k in ("evictions", "refills",
+                                    "rows_spilled", "prefetch_hits",
+                                    "prefetch_misses",
+                                    "prefetch_hit_rate")})]
+    # budget sweep (4x over budget and tighter) x watermark pairs
+    budgets = [max(n_tuples // 4, 64), max(n_tuples // 16, 64)]
+    wms = [(0.75, 0.5), (0.9, 0.25)]
+    for cells in budgets:
+        for high, low in wms:
+            budget = SpillConfig(budget_cells=cells, high_wm=high,
+                                 low_wm=low)
+            wf = _w3(n_tuples, budget)
+            with common.Timer() as t:
+                wf.run()
+            inc = wf.engine.incidents
+            rows.append(dict(
+                case="throughput", plane="jit", budget_cells=cells,
+                high_wm=high, low_wm=low, pressure_rounds="",
+                seconds=round(t.s, 3),
+                tuples_per_sec=int(n_tuples / max(t.s, 1e-9)),
+                identical=int(_series_equal(wf.sink.series, base)),
+                demotions=inc.count("demotion"),
+                mem_pressure=inc.count("mem-pressure"),
+                pressure_consumed=sum(c.pressure_consumed
+                                      for c in wf.controllers),
+                latency_ticks="", **_spill_stats(wf.engine)))
+    return rows
+
+
+def _latency_rows(n_tuples):
+    rows = []
+    cells = max(n_tuples // 8, 64)
+    for eager in (False, True):
+        cfg = ReshapeConfig(metric_period=24, pressure_rounds=eager)
+        wf = _w3(n_tuples, cells, cfg=cfg)
+        eng, ctrl = wf.engine, wf.controllers[0]
+        first_pressure = first_consumed = None
+        while not eng.done():
+            eng.run_super_tick(1)
+            if first_pressure is None and eng.incidents.count(
+                    "mem-pressure"):
+                first_pressure = eng.incidents.query("mem-pressure")[0].tick
+            if (first_pressure is not None and first_consumed is None
+                    and ctrl.pressure_consumed > 0):
+                first_consumed = eng.tick
+        latency = ("" if first_pressure is None or first_consumed is None
+                   else first_consumed - first_pressure)
+        rows.append(dict(
+            case="mitigation-latency", plane="jit", budget_cells=cells,
+            high_wm=0.75, low_wm=0.5, pressure_rounds=int(eager),
+            seconds="", tuples_per_sec="", identical="",
+            demotions=eng.incidents.count("demotion"),
+            mem_pressure=eng.incidents.count("mem-pressure"),
+            pressure_consumed=ctrl.pressure_consumed,
+            latency_ticks=latency, **_spill_stats(eng)))
+    return rows
+
+
+def run(n_tuples: int = 40_000) -> None:
+    if not HAS_JAX:                                 # pragma: no cover
+        common.emit("spill", [dict(case="skipped", plane="host",
+                                   **{k: "" for k in KEYS[2:]})],
+                    KEYS, size=dict(n_tuples=n_tuples))
+        return
+    rows = _throughput_rows(n_tuples) + _latency_rows(n_tuples)
+    common.emit("spill", rows, KEYS, size=dict(n_tuples=n_tuples))

@@ -47,6 +47,9 @@ BENCHES = [
     ("moe_balance", "bench_moe_balance", "§7.12 second engine (MoE)"),
     ("recovery", "bench_recovery",
      "resilience: cut cost full vs incremental, recovery latency, chaos"),
+    ("spill", "bench_spill",
+     "out-of-core spill tier: throughput vs watermark, prefetch hit "
+     "rate, pressure-mitigation latency"),
     ("roofline", "roofline", "§Roofline table from the dry-run artifacts"),
 ]
 

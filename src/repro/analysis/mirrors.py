@@ -26,9 +26,14 @@ HINT = ("update mirrors only from dispatched metrics (_dispatch/"
         "(sync_host/on_restore/demote); anywhere else forks host and "
         "device truth")
 
-#: the registered mirror attributes.
+#: the registered mirror attributes.  ``spilled_lens`` /
+#: ``spilled_rows`` are the spill tier's cursor mirrors: together with
+#: ``lens`` / ``rows_len`` (which stay *total* across tiers) they define
+#: the resident counts, so a stray write desynchronizes eviction/refill
+#: from device truth exactly like a queue-length fork.
 MIRRORS = {"lens", "received", "rows_len", "sent_per_worker",
-           "tuples_sent", "processed_total", "emitted_total"}
+           "tuples_sent", "processed_total", "emitted_total",
+           "spilled_lens", "spilled_rows"}
 
 #: allowed writer functions, keyed by path suffix.
 ALLOWED = {
@@ -36,6 +41,9 @@ ALLOWED = {
         "__init__", "_load_host_state", "on_restore", "_dispatch",
         "_dispatch_chain", "_append", "demote", "sync_host",
         "sync_stats", "sync_sink_counts",
+        # spill-tier accounting sites (cursor moves between tiers):
+        "_spill_refill", "_spill_evict_rings", "_spill_evict_rows",
+        "_spill_demote_fresh",
     },
     "dataflow/exchange.py": {"__init__", "send", "account"},
 }

@@ -14,10 +14,13 @@ Three runtime counterparts to the static rules:
   counter still advances (free — trace time only) so tests can pin
   compile counts via :func:`trace_counts`.
 
-* **mirror cross-check** (``sanitize-mirror``) — at every
-  ``sync_host`` boundary the exact host mirrors are compared against
-  the materialized device truth (ring ``tail - head`` vs ``lens``,
-  ``rlen`` vs ``rows_len``).
+* **mirror cross-check** (``sanitize-mirror`` / ``sanitize-spill``) —
+  at every ``sync_host`` boundary the exact host mirrors are compared
+  against the materialized device truth (ring ``tail - head`` vs the
+  resident count ``lens - spilled_lens``, ``rlen`` vs
+  ``rows_len - spilled_rows``), and the spill tier's host segments are
+  re-counted against the ``spilled_lens`` / ``spilled_rows`` cursor
+  mirrors (resident + spilled == totals).
 
 * **fold guards** (``sanitize-nan``) — fold-state sum accumulators are
   scanned for NaN/inf at the same boundary.

@@ -126,6 +126,15 @@ class ReshapeController:
         #: drain that feeds this controller is one O(W) transfer and is
         #: accounted like a metric-collection round.
         self.sync_readbacks = 0
+        #: memory-pressure mitigation hook (out-of-core tiering): the
+        #: device plane posts ``(worker, tick)`` here when an edge
+        #: crosses its spill high watermark — a skew split of the fat
+        #: worker sheds exactly the partition whose growth forced the
+        #: spill.  Pending events are consumed at the next metric round
+        #: (or eagerly, with ``cfg.pressure_rounds``) and counted in
+        #: ``pressure_consumed``.
+        self.pressure_events: List[tuple] = []
+        self.pressure_consumed = 0
         # Resolve the transfer mode once, at "workflow compile time" (§3.1).
         self.mode = choose_mode(adapter.traits, self.cfg.mode)
         self.strategy = choose_strategy(adapter.traits, self.mode)
@@ -146,14 +155,30 @@ class ReshapeController:
             out.extend(m.helpers)
         return out
 
+    def note_memory_pressure(self, worker: int, tick: int) -> None:
+        """Device-plane spill hook: ``worker`` crossed its edge's high
+        watermark at ``tick``.  Recording is decision-neutral (the skew
+        test itself is unchanged); consumption happens at the next
+        metric round, or immediately eager when ``cfg.pressure_rounds``
+        is set (the mitigation-latency knob)."""
+        self.pressure_events.append((int(worker), int(tick)))
+
     def step(self, tick: int) -> None:
         """One controller round. Call every engine tick."""
         self._tick = tick
         self._flush_control_messages(tick)
         if tick < self.cfg.initial_delay_ticks:
             return
+        eager = bool(self.cfg.pressure_rounds) and bool(self.pressure_events)
         if (tick - self.cfg.initial_delay_ticks) % self.cfg.metric_period != 0:
-            return
+            if not eager:
+                return
+        if self.pressure_events:
+            # Consume pending mem-pressure triggers: the metric round
+            # below already re-ranks workloads, so the fat worker the
+            # spill flagged is exactly the one the skew test examines.
+            self.pressure_consumed += len(self.pressure_events)
+            self.pressure_events.clear()
         self.tracker.update(self.adapter.workloads(), self.adapter.arrivals_by_owner())
         self._advance_mitigations(tick)
         self._detect(tick)

@@ -96,6 +96,12 @@ class ReshapeConfig:
     # Experiment harness: force the helper of a given skewed worker
     # (paper §7.2 pins worker 4 / worker 17 as CA's helper).
     pinned_helpers: dict = dataclasses.field(default_factory=dict)
+    # Memory-pressure trigger (out-of-core spill tier): run an eager
+    # detection round as soon as the device plane posts a mem-pressure
+    # event, instead of waiting for the next scheduled metric round.
+    # Lowers pressure->mitigation latency at the cost of off-grid
+    # rounds (so device-resident controllers refuse to arm under it).
+    pressure_rounds: bool = False
 
     def __post_init__(self) -> None:
         if self.eta < 0 or self.tau < 0:

@@ -171,6 +171,48 @@ differ from numpy's sequential weighted ``bincount`` (XLA scatter-add),
 which is why the engine's cross-plane contract is stated on
 ``Sink.series`` / ``Sink.counts`` (integers) and checkpoint counters.
 
+Memory tiering (watermark spill of cold device state)
+-----------------------------------------------------
+With a device budget armed (``Engine(device_budget=cells)`` or
+``REPRO_DEVICE_BUDGET``; see :mod:`repro.dataflow.spill`) each edge
+bounds its *resident* device entries: the budget is split evenly across
+workers (``SpillConfig.per_worker``), and crossing ``high_wm`` of that
+share triggers eviction of **cold spans** down to ``low_wm`` — for
+rings, the spans *behind the pop cursor's window* (the newest resident
+records: everything beyond ``max(low, budget)`` entries from the head,
+which the next pops cannot reach); for row stores, the oldest rows (a
+per-worker prefix — row logs are append-only and only read back at
+boundaries).  Evicted spans become checksummed host
+:class:`~repro.dataflow.spill.SpillSegment`\\ s ordered so that per
+worker the logical record sequence is always ``[resident][spilled]``.
+
+Prefetch contract: before every dispatch, ``_spill_refill`` re-uploads
+logically-next segments until the resident count covers the pop budget
+— so the fused dispatch's ``take`` equals the host plane's
+``min(budget, total)`` *exactly* and never blocks on a cold read; a
+double-buffered prefetcher (``SpillState.prefetch``) keeps the next
+two segments per worker pre-uploaded between dispatches.  Fresh pushes
+that land behind spilled spans are re-tiered to the spill tail right
+after the dispatch (``_spill_demote_fresh``), preserving the ordering
+invariant; fused chains are gated off (``_spill_gate``) whenever an
+edge holds spilled spans or projects a watermark crossing, so chain
+dispatches never need to evict.  The ``lens`` / ``rows_len`` mirrors
+keep counting resident **plus** spilled records, which keeps workloads,
+backlog, END detection and every controller decision bit-identical to
+an unspilled run.
+
+Pressure is a structured signal: the first crossing of the high
+watermark per worker records a ``mem-pressure`` incident and calls
+``ReshapeController.note_memory_pressure`` on the attached controller
+(a mitigation trigger — splitting the fat worker sheds the hot
+partition's growth); the signal re-arms below the low watermark.
+Degradation replaces the old cliffs: probe edges whose ``W * B * M``
+would blow ``MAX_EMIT_CELLS`` now emit in chunked sub-budget dispatches
+(``_tick_probe_chunked``, bit-exact: prefix pops compose and chunk
+splitting preserves per-lane expansion order) instead of demoting, and
+ring/row-store regrowth past the budget-implied allocation cap records
+a one-time ``regrow-capped`` incident instead of doubling silently.
+
 Invariants (machine-checked by ``repro.analysis``)
 --------------------------------------------------
 The conventions this plane depends on are enforced by the plane-contract
@@ -214,6 +256,7 @@ from typing import Callable, List, Optional, Union
 import numpy as np
 
 from ..analysis import sanitize as _sanitize
+from . import spill as spill_tier
 from .resilience import InjectedDispatchFault
 from .tuples import Chunk, ring_span
 
@@ -289,9 +332,18 @@ def wireable(op, num_keys: int) -> bool:
     """
     from .operators import (Filter, GroupByAgg, HashJoinBuild,
                             HashJoinProbe, Project, RangeSort, Sink)
-    return (type(op) in (Filter, Project, GroupByAgg, Sink,
-                         HashJoinBuild, HashJoinProbe, RangeSort)
-            and op.num_workers * num_keys <= MAX_FOLD_CELLS
+    if type(op) not in (Filter, Project, GroupByAgg, Sink,
+                        HashJoinBuild, HashJoinProbe, RangeSort):
+        return False
+    # Row-state operators keep no dense [W, K] structure (their state is
+    # a [W, rcap] row log), so only the K-sized routing consts gate them
+    # — wide key spaces stay wireable and rely on the spill tier for
+    # memory pressure instead of refusing up front.
+    if type(op) in (HashJoinBuild, RangeSort):
+        cells_ok = num_keys <= MAX_FOLD_CELLS
+    else:
+        cells_ok = op.num_workers * num_keys <= MAX_FOLD_CELLS
+    return (cells_ok
             and (type(op) is Sink or op.service_rate <= MAX_SERVICE_RATE))
 
 
@@ -1145,6 +1197,10 @@ class DeviceController:
             return f"strategy {controller.strategy}"
         if cfg.control_delay_ticks != 0:
             return "control delay"
+        if getattr(cfg, "pressure_rounds", False):
+            # Eager pressure-triggered rounds fire off the metric grid;
+            # the jitted ctrl_step only covers grid-aligned rounds.
+            return "pressure rounds"
         if cfg.max_helpers != 1:
             return "multi-helper"
         if not cfg.phase1_full_partition:
@@ -1473,6 +1529,17 @@ class DeviceOpRuntime:
         # host mirrors (exact integers, updated per dispatch)
         self.lens = np.zeros(self.W, dtype=np.int64)
         self.received = np.zeros(self.W, dtype=np.int64)
+        # ---- spill tier (memory tiering; see module docstring) --------- #
+        #: entries of ``lens`` / ``rows_len`` currently held in host
+        #: spill segments (exact mirrors: resident = total - spilled).
+        self.spilled_lens = np.zeros(self.W, dtype=np.int64)
+        self.spilled_rows = np.zeros(self.W, dtype=np.int64)
+        self.budget_cfg = spill_tier.resolve_budget(
+            getattr(engine, "device_budget", None))
+        self.spill: Optional[spill_tier.SpillState] = None
+        self._b_limit: Optional[int] = None   # chunked-probe B clamp
+        self._degraded_once = False           # one-time degraded-emit
+        self._regrow_capped_once = False      # one-time regrow-capped
         self._fn = getattr(op, "predicate", None) or getattr(op, "fn", None)
         self._pull = self._pull_counters    # stable identity (ownership)
         self._host_fresh = False   # host copies match device state
@@ -1718,6 +1785,14 @@ class DeviceOpRuntime:
         op = self.op
         self._reload_pending = False
         self._host_fresh = False
+        # Host structures hold the FULL content (``sync_host`` folds the
+        # spill tier back in before any host mutation): everything the
+        # reload uploads is resident again, so the spill tier restarts
+        # empty and the spilled mirrors zero out.
+        self.spilled_lens[:] = 0
+        self.spilled_rows[:] = 0
+        if self.spill is not None:
+            self.spill.clear()
         # Host-loaded queue content has unknown placement provenance
         # (restores may install backlog placed under any table history):
         # chain fusion stays off until these rings drain.
@@ -1822,23 +1897,51 @@ class DeviceOpRuntime:
         # wireable() guarantees service_rate <= MAX_SERVICE_RATE for
         # ring-backed kinds, so B always covers the engine's budgets.
         budget_cap = self.engine.batch_ticks * self.op.service_rate
+        if self._b_limit is not None:
+            # Degraded (chunked) probe emission: the automatic widening
+            # must not blow the emit buffer the chunk driver just sized.
+            budget_cap = min(budget_cap, self._b_limit)
         if self.kind != "sink" and budget_cap > self.B:
             self.B = int(budget_cap)
-        need = (int(self.lens.max(initial=0)) + self.staged_live
-                + int(incoming))
+        # Capacity covers the RESIDENT share only — spilled entries live
+        # in host segments and re-enter through the budget-covering
+        # refill, never all at once.
+        need = (int((self.lens - self.spilled_lens).max(initial=0))
+                + self.staged_live + int(incoming))
         if self.state is None:
             self.cap = max(self.cap, _pow2(2 * max(need, 1)))
             self._alloc_state()
         elif need > self.cap and self.kind != "sink":
-            self.cap = _pow2(2 * need)
+            self.cap = self._capped_growth(_pow2(2 * need), "ring")
             self._regrow_rings()
-        if (self.kind == "rows" and self.state is not None
-                and int(self.rows_len.max(initial=0)) + self.B > self.rcap):
-            # The row log only grows (appends, never pops): double it so
-            # the next dispatch's worst-case append (<= B rows) fits.
-            self.rcap = _pow2(2 * (int(self.rows_len.max(initial=0))
-                                   + self.B))
-            self._regrow_rowstore()
+        if self.kind == "rows" and self.state is not None:
+            rres = int((self.rows_len - self.spilled_rows).max(initial=0))
+            if rres + self.B > self.rcap:
+                # The row log only grows (appends, never pops): double it
+                # so the next dispatch's worst-case append (<= B rows)
+                # fits.
+                self.rcap = self._capped_growth(
+                    _pow2(2 * (rres + self.B)), "row store")
+                self._regrow_rowstore()
+
+    def _capped_growth(self, new_cap: int, what: str) -> int:
+        """Satellite of the spill tier: growth past the budget-implied
+        allocation cap means watermark eviction could not keep this edge
+        bounded (a burst larger than the budget itself).  Grow anyway —
+        correctness over the budget — but surface it once."""
+        cfg = self.budget_cfg
+        if cfg is not None:
+            limit = _pow2(2 * (cfg.per_worker(self.W) + max(self.B, 1)))
+            if new_cap > limit and not self._regrow_capped_once:
+                self._regrow_capped_once = True
+                self.engine.incidents.record(
+                    "regrow-capped", tick=self.engine.tick,
+                    edge=self.op.name,
+                    cause=f"{what} regrowth to {new_cap} cells exceeds "
+                          f"the device-budget cap {limit}",
+                    action="grow past the budget (burst exceeds it); "
+                           "spill resumes bounding the steady state")
+        return new_cap
 
     def _regrow_rings(self) -> None:
         """Re-layout the rings at a larger capacity (content preserved)."""
@@ -1849,8 +1952,9 @@ class DeviceOpRuntime:
         old_cap = rk_np.shape[1]
         new_k = np.zeros((self.W, self.cap), np.int64)
         new_v = np.zeros((self.W, self.cap), np.float64)
+        resident = self.lens - self.spilled_lens
         for w in range(self.W):
-            ln = int(self.lens[w])
+            ln = int(resident[w])
             idx = ring_span(head[w], ln, old_cap)
             new_k[w, :ln] = rk_np[w, idx]
             new_v[w, :ln] = rv_np[w, idx]
@@ -1858,7 +1962,7 @@ class DeviceOpRuntime:
             self.state.update(rk=jnp.asarray(new_k, jnp.int64),
                               rv=jnp.asarray(new_v, jnp.float64),
                               head=jnp.zeros(self.W, jnp.int64),
-                              tail=jnp.asarray(self.lens.copy(),
+                              tail=jnp.asarray(resident.copy(),
                                                jnp.int64))
 
     def _regrow_rowstore(self) -> None:
@@ -1879,6 +1983,234 @@ class DeviceOpRuntime:
             self.state.update(bk=jnp.asarray(new_k, jnp.int64),
                               bv=jnp.asarray(new_v, jnp.float64),
                               bo=jnp.asarray(new_o, bool))
+
+    # ---- spill tier (memory tiering; see module docstring) ------------- #
+    def set_budget(self, budget) -> None:
+        """(Re)configure this edge's device budget mid-run (the chaos
+        ``mem-pressure`` fault shrinks it; its undo restores).  Setting
+        ``None`` disables eviction but keeps any spilled spans reachable
+        (refill keeps draining them)."""
+        self.budget_cfg = spill_tier.resolve_budget(budget)
+
+    def _device_put(self, a):
+        import jax
+        with _x64():
+            return jax.device_put(a)
+
+    def _spill_corrupt_incident(self, exc) -> None:
+        self.engine.incidents.record(
+            "spill-corrupt", tick=self.engine.tick, edge=self.op.name,
+            cause=str(exc),
+            action="recover from the last valid checkpoint cut")
+
+    def _spill_refill(self, budget: int) -> None:
+        """Re-upload logically-next spilled ring spans until the pop
+        window is covered by resident records: per worker, refill stops
+        when ``resident >= budget`` or the spill store drains, so the
+        dispatch's ``take = min(budget, resident)`` equals the host
+        plane's ``min(budget, total)`` exactly and consumes exactly the
+        logically-first records.  Prefetched (pre-uploaded) segments make
+        the common refill a device-to-device append."""
+        sp = self.spill
+        if (sp is None or self.state is None or self._reload_pending
+                or self.kind == "sink" or not sp.any()):
+            return
+        jnp = _jnp()
+        budget = int(budget)
+        with _x64():
+            for w in range(self.W):
+                if not sp.rings[w]:
+                    continue
+                res = int(self.lens[w] - self.spilled_lens[w])
+                while sp.rings[w] and res < budget:
+                    try:
+                        seg, dev = sp.pop_ring_front(w)
+                    except spill_tier.SpillCorruptError as exc:
+                        self._spill_corrupt_incident(exc)
+                        raise
+                    if res + seg.n > self.cap:
+                        self.cap = _pow2(2 * (res + seg.n + budget))
+                        self._regrow_rings()
+                    k, v = (seg.arrays if dev is None else dev)[:2]
+                    tail = int(np.asarray(self.state["tail"])[w])
+                    idx = (tail + jnp.arange(seg.n, dtype=jnp.int64)
+                           ) % self.cap
+                    self.state["rk"] = self.state["rk"].at[w, idx].set(
+                        jnp.asarray(k, jnp.int64))
+                    self.state["rv"] = self.state["rv"].at[w, idx].set(
+                        jnp.asarray(v, jnp.float64))
+                    self.state["tail"] = self.state["tail"].at[w].add(
+                        np.int64(seg.n))
+                    self.spilled_lens[w] -= seg.n
+                    res += seg.n
+                sp.prefetch(w, self._device_put)
+
+    def _spill_admit(self, budget: int) -> None:
+        """Watermark check before a dispatch: evict cold resident spans
+        (behind the pop window) to the host spill tier and raise the
+        structured ``mem-pressure`` signal on a high-watermark crossing
+        (hysteresis: re-arms under the low watermark)."""
+        cfg = self.budget_cfg
+        if (cfg is None or self.kind == "sink" or self.state is None
+                or self._reload_pending):
+            return
+        L = cfg.per_worker(self.W)
+        high = max(int(L * cfg.high_wm), 1)
+        low = max(int(L * cfg.low_wm), 1)
+        budget = int(budget)
+        res = self.lens - self.spilled_lens
+        over = [w for w in range(self.W)
+                if int(res[w]) > max(high, budget)]
+        rows_over = []
+        rres = None
+        if self.kind == "rows":
+            rres = self.rows_len - self.spilled_rows
+            rows_over = [w for w in range(self.W) if int(rres[w]) > high]
+        if (over or rows_over) and self.spill is None:
+            self.spill = spill_tier.SpillState(cfg, self.W)
+        if over:
+            self._spill_evict_rings(over, keep=max(low, budget))
+        if rows_over:
+            self._spill_evict_rows(rows_over, keep=low)
+        sp = self.spill
+        if sp is None:
+            return
+        pressured = set(over) | set(rows_over)
+        for w in range(self.W):
+            if w in pressured:
+                if not sp.pressure_active[w]:
+                    sp.pressure_active[w] = True
+                    self.engine.incidents.record(
+                        "mem-pressure", tick=self.engine.tick,
+                        edge=self.op.name,
+                        cause=f"worker {w}: resident device state crossed "
+                              f"the high watermark ({high} of {L} "
+                              f"cells/worker)",
+                        action="spill cold spans to host; notify the "
+                               "attached controller")
+                    self._notify_pressure(w)
+            elif (int(res[w]) <= low
+                  and (rres is None or int(rres[w]) <= low)):
+                sp.pressure_active[w] = False
+
+    def _spill_evict_rings(self, ws: List[int], keep: int) -> None:
+        """Move the newest resident ring records (cold: the next pops
+        cannot reach them) of each listed worker into checksummed host
+        segments, prepending at the spill front (they are logically just
+        before any already-spilled span)."""
+        jnp = _jnp()
+        rk = np.asarray(self.state["rk"])
+        rv = np.asarray(self.state["rv"])
+        head = np.asarray(self.state["head"])
+        delta = np.zeros(self.W, np.int64)
+        for w in ws:
+            res = int(self.lens[w] - self.spilled_lens[w])
+            m = res - int(keep)
+            if m <= 0:
+                continue
+            idx = (int(head[w]) + res - m + np.arange(m)) % self.cap
+            seg = spill_tier.SpillSegment(
+                (rk[w, idx].copy(), rv[w, idx].copy()), m)
+            self.spill.prepend_ring(w, seg)
+            self.spilled_lens[w] += m
+            delta[w] = m
+        if delta.any():
+            with _x64():
+                self.state["tail"] = (self.state["tail"]
+                                      - jnp.asarray(delta, jnp.int64))
+            for w in ws:
+                self.spill.prefetch(w, self._device_put)
+
+    def _spill_evict_rows(self, ws: List[int], keep: int) -> None:
+        """Spill the oldest rows (a per-worker prefix) of the device row
+        store: row logs are append-only and only read back at
+        ``sync_host``, so the prefix is the coldest span by construction
+        and never needs a mid-run re-upload."""
+        jnp = _jnp()
+        bk = np.asarray(self.state["bk"]).copy()
+        bv = np.asarray(self.state["bv"]).copy()
+        bo = np.asarray(self.state["bo"]).copy()
+        rlen = np.asarray(self.state["rlen"]).copy()
+        for w in ws:
+            rres = int(self.rows_len[w] - self.spilled_rows[w])
+            m = rres - int(keep)
+            if m <= 0:
+                continue
+            seg = spill_tier.SpillSegment(
+                (bk[w, :m].copy(), bv[w, :m].copy(), bo[w, :m].copy()), m)
+            self.spill.append_rows(w, seg)
+            left = rres - m
+            bk[w, :left] = bk[w, m:rres]
+            bv[w, :left] = bv[w, m:rres]
+            bo[w, :left] = bo[w, m:rres]
+            bk[w, left:rres] = 0
+            bv[w, left:rres] = 0.0
+            bo[w, left:rres] = False
+            rlen[w] = left
+            self.spilled_rows[w] += m
+        with _x64():
+            self.state.update(bk=jnp.asarray(bk, jnp.int64),
+                              bv=jnp.asarray(bv, jnp.float64),
+                              bo=jnp.asarray(bo, bool),
+                              rlen=jnp.asarray(rlen, jnp.int64))
+
+    def _spill_demote_fresh(self, pushed: np.ndarray) -> None:
+        """Fresh pushes landed behind spilled spans: move them to the
+        spill tier's logical END so the per-worker order stays
+        ``[resident][spilled]`` (the pops of this dispatch never reached
+        them — refill guaranteed ``resident >= budget`` up front)."""
+        ws = [w for w in range(self.W)
+              if int(pushed[w]) > 0 and self.spill.rings[w]]
+        if not ws:
+            return
+        jnp = _jnp()
+        rk = np.asarray(self.state["rk"])
+        rv = np.asarray(self.state["rv"])
+        head = np.asarray(self.state["head"])
+        delta = np.zeros(self.W, np.int64)
+        for w in ws:
+            m = int(pushed[w])
+            res = int(self.lens[w] - self.spilled_lens[w])
+            idx = (int(head[w]) + res - m + np.arange(m)) % self.cap
+            seg = spill_tier.SpillSegment(
+                (rk[w, idx].copy(), rv[w, idx].copy()), m)
+            self.spill.append_ring(w, seg)
+            self.spilled_lens[w] += m
+            delta[w] = m
+        with _x64():
+            self.state["tail"] = (self.state["tail"]
+                                  - jnp.asarray(delta, jnp.int64))
+
+    def _spill_gate(self, budget) -> bool:
+        """Must this edge stay per-edge (unfused) this dispatch?  True
+        when spilled spans exist — refill and fresh-push re-tiering run
+        only on the per-edge path — or when the projected resident count
+        crosses the high watermark, so a chain dispatch never needs to
+        evict mid-flight."""
+        if self.spill is not None and self.spill.any():
+            return True
+        cfg = self.budget_cfg
+        if cfg is None or self.kind == "sink":
+            return False
+        L = cfg.per_worker(self.W)
+        high = max(int(L * cfg.high_wm), 1)
+        res = int((self.lens - self.spilled_lens).max(initial=0))
+        if self.kind == "rows":
+            res = max(res, int((self.rows_len
+                                - self.spilled_rows).max(initial=0)))
+        projected = res + self.staged_live + int(budget)
+        return projected > max(high, int(budget))
+
+    def _notify_pressure(self, worker: int) -> None:
+        """Memory pressure is a mitigation trigger: hand the structured
+        signal to the attached host controller (the skew split of the
+        fat worker sheds the hot partition's growth)."""
+        for att in getattr(self.engine, "controllers", ()):
+            if getattr(att, "op", None) is not self.op:
+                continue
+            note = getattr(att.controller, "note_memory_pressure", None)
+            if note is not None:
+                note(worker, self.engine.tick)
 
     # ---- routing constants / split counters --------------------------- #
     def _refresh_consts(self, force: bool = False) -> None:
@@ -1961,6 +2293,10 @@ class DeviceOpRuntime:
         if chaos is not None and not self._chaos_dispatch_ok(chaos):
             return self.op.tick(budget)    # demoted: host path replays
         if self.kind == "probe" and not self._probe_capacity_ok(budget):
+            if self.budget_cfg is not None:
+                # Spill-backed degradation instead of the demotion
+                # cliff: emit in chunked sub-budget dispatches.
+                return self._tick_probe_chunked(budget)
             # A build table (or budget) skewed enough that the padded
             # emit buffer W * B * M would blow the ceiling: the host
             # path handles unbounded fanout natively.
@@ -1972,7 +2308,9 @@ class DeviceOpRuntime:
         self._host_fresh = False
         chunks: List[DeviceChunk] = []
         try:
+            self._spill_refill(budget)
             self._prep(budget)
+            self._spill_admit(budget)
             chunks, self.staged, self.staged_live = self.staged, [], 0
             return self._dispatch(_step_for(self.kind), self._spec(),
                                   chunks, budget)
@@ -2012,6 +2350,73 @@ class DeviceOpRuntime:
         M = (self.M if self.state is not None and not self._reload_pending
              else self._host_fanout())
         return self.W * B * M <= MAX_EMIT_CELLS
+
+    def _tick_probe_chunked(self, budget: int) -> List:
+        """Spill-backed degradation of the probe-fanout cliff: instead of
+        demoting the edge, pop and expand in sub-budget chunks whose
+        padded emit buffer ``W * b * M`` stays under ``MAX_EMIT_CELLS``.
+        Bit-exact vs one full-budget dispatch: sequential prefix pops
+        compose to one pop of the summed budget, and splitting a popped
+        window into chunks preserves each lane's expansion order (the
+        cross-plane contract is integer-based, so f32 accumulation order
+        is already out of contract).  Only a single record whose fanout
+        alone blows the buffer (``W * M > MAX_EMIT_CELLS``) still
+        demotes."""
+        M = max(self.M if self.state is not None and not self._reload_pending
+                else self._host_fanout(), 1)
+        if self.W * M > MAX_EMIT_CELLS:
+            self.demote("probe fanout")
+            return self.op.tick(budget)
+        b_limit = max(MAX_EMIT_CELLS // (self.W * M), 1)
+        self._b_limit = b_limit
+        if self.B > b_limit:
+            self.B = b_limit       # shrink the static window (one retrace)
+        if not self._degraded_once:
+            self._degraded_once = True
+            self.engine.incidents.record(
+                "degraded-emit", tick=self.engine.tick, edge=self.op.name,
+                cause=f"probe emit buffer W*B*M over MAX_EMIT_CELLS "
+                      f"(W={self.W}, M={M})",
+                action=f"chunked emission at B<={b_limit} "
+                       f"(no demotion)")
+        self._host_fresh = False
+        left = int(budget)
+        chunks: List[DeviceChunk] = []
+        try:
+            first = True
+            while True:
+                b = min(left, b_limit)
+                self._spill_refill(b)
+                self._prep(b)
+                self._spill_admit(b)
+                if first:
+                    chunks, self.staged, self.staged_live = \
+                        self.staged, [], 0
+                self._dispatch(_step_for(self.kind), self._spec(),
+                               chunks, b)
+                chunks = []
+                first = False
+                left -= b
+                if left <= 0 or b == 0:
+                    break
+                if (int((self.lens - self.spilled_lens).sum()) == 0
+                        and not self.staged):
+                    break          # drained: further pops would take 0
+        except _sanitize.SanitizeError:
+            raise               # never masked as a host-path demotion
+        except Exception as exc:
+            if self._dispatched:
+                raise
+            import warnings
+            warnings.warn(
+                f"device plane: first dispatch for {self.op.name!r} "
+                f"failed ({type(exc).__name__}: {exc}); demoting the "
+                f"edge to the host path", RuntimeWarning, stacklevel=2)
+            self.staged = chunks + self.staged
+            self.staged_live = sum(c.n_live for c in self.staged)
+            self.demote("untraceable fn")
+            return self.op.tick(budget)
+        return []
 
     def _emit_bound(self, budget: int) -> int:
         """Most records this stage can hand its chain follower inside one
@@ -2068,6 +2473,8 @@ class DeviceOpRuntime:
                 or not self._preserves_keys()
                 or budget != eng._super_k * self.op.service_rate):
             return None
+        if self._spill_gate(budget):
+            return None          # spill handling runs per-edge only
         tok = self._live_token()
         if tok is None:
             return None
@@ -2088,6 +2495,8 @@ class DeviceOpRuntime:
             if (d.kind == "probe" and not d._probe_capacity_ok(
                     eng._super_k * d.op.service_rate)):
                 break                   # d's own tick will demote it
+            if d._spill_gate(eng._super_k * d.op.service_rate):
+                break                   # d must evict/refill per-edge
             members.append(d)
             if (d.kind not in ("filter", "project", "probe")
                     or d._chain_disabled or not d._preserves_keys()):
@@ -2252,6 +2661,7 @@ class DeviceOpRuntime:
             seq = ([(c, 0) for c in chunks[:-1]]
                    + [(chunks[-1], budget)]) if chunks else [(None, budget)]
             outs: List[DeviceChunk] = []
+            pushed = np.zeros(self.W, dtype=np.int64)
             for ch, b in seq:
                 dc = (None if ch is None
                       else (ch.keys, ch.vals, ch.valid))
@@ -2270,6 +2680,7 @@ class DeviceOpRuntime:
                 self.edge.exchange.account(hist)
                 self.received += hist
                 self.lens += hist - take
+                pushed += hist
                 if self.kind == "rows":   # every popped row was appended
                     self.rows_len += take
                 for w, worker in enumerate(self.op.workers):
@@ -2281,6 +2692,11 @@ class DeviceOpRuntime:
                         worker.stats.emitted_total += int(em[w])
                     if n_live:
                         outs.append(DeviceChunk(*out, n_live))
+            if (self.spill is not None and pushed.any()
+                    and any(self.spill.rings)):
+                # Ordering invariant: fresh pushes behind spilled spans
+                # re-tier to the spill tail (see _spill_demote_fresh).
+                self._spill_demote_fresh(pushed)
         # Emission happens here (inside the op's tick slot) so the
         # downstream edge sees outputs in exactly the host plane's order.
         if outs and self.op.out_edge is not None:
@@ -2345,9 +2761,21 @@ class DeviceOpRuntime:
             rv = np.asarray(self.state["rv"])
             head = np.asarray(self.state["head"])
             for w, worker in enumerate(op.workers):
-                idx = ring_span(head[w], self.lens[w], self.cap)
-                worker.queue.restore((rk[w, idx].copy(), rv[w, idx].copy()),
-                                     int(self.received[w]))
+                res = int(self.lens[w] - self.spilled_lens[w])
+                idx = ring_span(head[w], res, self.cap)
+                k_w, v_w = rk[w, idx].copy(), rv[w, idx].copy()
+                if self.spilled_lens[w]:
+                    # Logical order is [resident][spilled]: the host
+                    # queue gets resident records first, then the CRC-
+                    # verified cold spans in deque order.
+                    try:
+                        segs = self.spill.drain_ring(w)
+                    except spill_tier.SpillCorruptError as exc:
+                        self._spill_corrupt_incident(exc)
+                        raise
+                    k_w = np.concatenate([k_w] + [s.arrays[0] for s in segs])
+                    v_w = np.concatenate([v_w] + [s.arrays[1] for s in segs])
+                worker.queue.restore((k_w, v_w), int(self.received[w]))
         if self.kind == "fold":
             cnt = np.asarray(self.state["counts"])
             sm = np.asarray(self.state["sums"])
@@ -2368,8 +2796,23 @@ class DeviceOpRuntime:
             bv = np.asarray(self.state["bv"])
             bo = np.asarray(self.state["bo"])
             for w, worker in enumerate(op.workers):
-                n = int(self.rows_len[w])
+                n = int(self.rows_len[w] - self.spilled_rows[w])
                 k_w, v_w, o_w = bk[w, :n], bv[w, :n], bo[w, :n]
+                if self.spilled_rows[w]:
+                    # Spilled row segments are the *oldest* rows (a
+                    # prefix per worker): re-materialize them ahead of
+                    # the resident suffix so arrival order is exact.
+                    try:
+                        segs = self.spill.drain_rows(w)
+                    except spill_tier.SpillCorruptError as exc:
+                        self._spill_corrupt_incident(exc)
+                        raise
+                    k_w = np.concatenate([s.arrays[0] for s in segs]
+                                         + [k_w])
+                    v_w = np.concatenate([s.arrays[1] for s in segs]
+                                         + [v_w])
+                    o_w = np.concatenate([s.arrays[2] for s in segs]
+                                         + [o_w])
                 worker.state.clear()
                 worker.scattered.clear()
                 worker.state.extend_segments(k_w[o_w], v_w[o_w])
@@ -2401,18 +2844,37 @@ class DeviceOpRuntime:
         if self.kind != "sink":
             dev = (np.asarray(self.state["tail"])
                    - np.asarray(self.state["head"]))
-            if not np.array_equal(dev, self.lens):
+            resident = self.lens - self.spilled_lens
+            if not np.array_equal(dev, resident):
                 problems.append((
                     "sanitize-mirror",
-                    f"queue-length mirror {self.lens.tolist()} != device "
+                    f"queue-length mirror {resident.tolist()} (total "
+                    f"{self.lens.tolist()} - spilled "
+                    f"{self.spilled_lens.tolist()}) != device "
                     f"tail-head {dev.tolist()}"))
         if self.kind == "rows":
             rlen = np.asarray(self.state["rlen"])
-            if not np.array_equal(rlen, self.rows_len):
+            rres = self.rows_len - self.spilled_rows
+            if not np.array_equal(rlen, rres):
                 problems.append((
                     "sanitize-mirror",
-                    f"rows_len mirror {self.rows_len.tolist()} != device "
+                    f"rows_len mirror {rres.tolist()} (total "
+                    f"{self.rows_len.tolist()} - spilled "
+                    f"{self.spilled_rows.tolist()}) != device "
                     f"rlen {rlen.tolist()}"))
+        # Spill cross-check: host-side segment totals must equal the
+        # spilled-count mirrors exactly (resident + spilled == totals).
+        for w in range(self.W):
+            host_ring = self.spill.ring_len(w) if self.spill else 0
+            host_rows = self.spill.rows_len(w) if self.spill else 0
+            if (host_ring != int(self.spilled_lens[w])
+                    or host_rows != int(self.spilled_rows[w])):
+                problems.append((
+                    "sanitize-spill",
+                    f"worker {w}: spill segments hold {host_ring} ring / "
+                    f"{host_rows} row records but mirrors say "
+                    f"{int(self.spilled_lens[w])} / "
+                    f"{int(self.spilled_rows[w])}"))
         for name in ("sums", "scat_sums"):
             if name in self.state:
                 if not np.isfinite(np.asarray(self.state[name])).all():
@@ -2463,6 +2925,12 @@ class DeviceOpRuntime:
         self._consts_version = -1
         self._chain_serial = -1        # never "already ticked" post-restore
         self.staged, self.staged_live = [], 0
+        # Restored host structures hold the *full* content; any spill
+        # segments predate the restore and must not be re-applied.
+        self.spilled_lens[:] = 0
+        self.spilled_rows[:] = 0
+        if self.spill is not None:
+            self.spill.clear()
         for w, worker in enumerate(self.op.workers):
             self.lens[w] = len(worker.queue)
             self.received[w] = worker.queue.received_total

@@ -285,7 +285,8 @@ class Engine:
                  device_executor: Optional[str] = None,
                  device_use_kernel: bool = False,
                  device_chain: Optional[bool] = None,
-                 device_controller: Optional[bool] = None):
+                 device_controller: Optional[bool] = None,
+                 device_budget=None):
         self.partition_backend = partition_backend
         self.reference = bool(reference)
         self.batch_ticks = max(1, int(batch_ticks))
@@ -319,6 +320,15 @@ class Engine:
             device_controller = (
                 os.environ.get("REPRO_DEVICE_CONTROLLER", "0") == "1")
         self.device_controller = bool(device_controller)
+        #: per-edge device memory budget (cells) for the spill tier: an
+        #: int/str cell count, a :class:`repro.dataflow.spill.SpillConfig`
+        #: for custom watermarks, or None for the ``REPRO_DEVICE_BUDGET``
+        #: env default (unset = unbounded, spill tier off).  Each
+        #: DeviceOpRuntime resolves this at construction; crossing the
+        #: high watermark evicts cold spans to checksummed host segments
+        #: instead of growing device state (see ``dataflow/spill.py``).
+        from .spill import resolve_budget as _resolve_budget
+        self.device_budget = _resolve_budget(device_budget)
         self.sources: List[Source] = []
         self.ops: List[Operator] = []                 # topological order
         self.edges: List[Edge] = []

@@ -26,7 +26,10 @@ Deterministic chaos harness
     A seeded :class:`FaultPlan` schedules a taxonomy of faults —
     worker volatile-state loss, device-dispatch failure, straggler
     throttle, corrupted / missing checkpoint, dropped / delayed control
-    messages — and :class:`ChaosRunner` drives the engine loop,
+    messages, mid-run device-budget shrink (``mem-pressure``, absorbed
+    by the spill tier), corrupted host spill segment
+    (``spill-corrupt``, healed by rollback to the last valid cut) —
+    and :class:`ChaosRunner` drives the engine loop,
     injecting them at super-tick seams (a fault tick interior to a
     fused window forces a seam there, so mid-super-tick boundaries are
     exercised too) and recovering through the hardened
@@ -163,15 +166,17 @@ CORRUPT_CUT = "corrupt-cut"        # the newest checkpoint is corrupted
 MISSING_CUT = "missing-cut"        # the newest checkpoint disappears
 CTRL_DROP = "ctrl-drop"            # pending control messages are dropped
 CTRL_DELAY = "ctrl-delay"          # pending control messages are delayed
+MEM_PRESSURE = "mem-pressure"      # device budget shrinks, forcing spill
+SPILL_CORRUPT = "spill-corrupt"    # a host spill segment fails its CRC
 
 ALL_FAULT_KINDS: Tuple[str, ...] = (
     WORKER_LOSS, DISPATCH_FAIL, STRAGGLER, CORRUPT_CUT, MISSING_CUT,
-    CTRL_DROP, CTRL_DELAY)
+    CTRL_DROP, CTRL_DELAY, MEM_PRESSURE, SPILL_CORRUPT)
 
 #: faults the engine keeps running under until "detected" (duration in
 #: ticks); everything else is crash-like: detected and recovered at the
 #: injection seam.
-_DURATION_KINDS = (STRAGGLER, CTRL_DROP, CTRL_DELAY)
+_DURATION_KINDS = (STRAGGLER, CTRL_DROP, CTRL_DELAY, MEM_PRESSURE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -335,8 +340,8 @@ class ChaosRunner:
         everything after the previous cut gets rolled back and replayed
         canonically: rollback faults qualify (recovery restores a cut
         taken at a canonical window start and replays), dispatch faults
-        do not (healed in place) — those inject at the next natural
-        seam instead, and checkpoints are interval-based
+        and mem-pressure do not (healed in place) — those inject at the
+        next natural seam instead, and checkpoints are interval-based
         (:meth:`CheckpointCoordinator.maybe_checkpoint`) precisely so
         cuts never force seams of their own."""
         eng = self.engine
@@ -344,12 +349,14 @@ class ChaosRunner:
         horizon = max(1, min(eng.batch_ticks, max_ticks - t0))
         k = eng._fusible_ticks(horizon) if horizon > 1 else 1
         stop = t0 + k
+        in_place = (DISPATCH_FAIL, MEM_PRESSURE)
         for ev in self._queue:
-            if ev.kind != DISPATCH_FAIL:
+            if ev.kind not in in_place:
                 stop = min(stop, max(ev.tick, t0 + 1))
                 break
         for f in self._active:
-            stop = min(stop, max(f.recover_at, t0 + 1))
+            if f.rollback:
+                stop = min(stop, max(f.recover_at, t0 + 1))
         return max(1, stop - t0)
 
     # ---- injection ----------------------------------------------------- #
@@ -420,6 +427,40 @@ class ChaosRunner:
                     p.apply_at += max(1, ev.duration)
                     n += 1
             detail = f"{n} pending control messages delayed"
+            rollback = True
+        elif ev.kind == MEM_PRESSURE:
+            # Shrink one device edge's memory budget mid-run: the spill
+            # tier must absorb the squeeze (watermark eviction to host
+            # segments), keeping results bit-identical — healed by undo
+            # alone, no rollback (spill is exact by construction).
+            rts = [o.device for o in eng.ops
+                   if getattr(o, "device", None) is not None]
+            if rts:
+                rt = rts[ev.target % len(rts)]
+                old = rt.budget_cfg
+                shrunk = 8 * max(1, rt.W)
+                rt.set_budget(shrunk)
+                undo = lambda rt=rt, old=old: setattr(  # noqa: E731
+                    rt, "budget_cfg", old)
+                detail = (f"{rt.op.name} device budget shrunk to "
+                          f"{shrunk} cells for {ev.duration} ticks")
+            else:
+                detail = "no device runtime (host plane)"
+        elif ev.kind == SPILL_CORRUPT:
+            # Flip a byte in a spilled host segment.  The CRC catches it
+            # on any read back; the chaos heal is crash-like rollback to
+            # the last valid cut (restore clears the spill tier, so the
+            # poisoned segment is discarded and the replay is canonical).
+            n = 0
+            for o in eng.ops:
+                rt = getattr(o, "device", None)
+                sp = getattr(rt, "spill", None)
+                if sp is not None and sp.corrupt_one():
+                    n += 1
+                    detail = f"{o.name}: one spill segment corrupted"
+                    break
+            if not n:
+                detail = "no spill segments (nothing spilled yet)"
             rollback = True
         log.record("fault", tick=eng.tick, cause=ev.kind,
                    action=detail or "injected")

@@ -25,11 +25,12 @@ from .operators import Filter, GroupByAgg, HashJoinProbe, Operator, Project, Ran
 
 def _engine(reference: bool, partition_backend, batch_ticks: int = 1,
             device_executor=None, device_chain=None,
-            device_controller=None) -> Engine:
+            device_controller=None, device_budget=None) -> Engine:
     return Engine(partition_backend=partition_backend, reference=reference,
                   batch_ticks=batch_ticks, device_executor=device_executor,
                   device_chain=device_chain,
-                  device_controller=device_controller)
+                  device_controller=device_controller,
+                  device_budget=device_budget)
 
 
 def _op_cls(cls, reference: bool):
@@ -85,13 +86,15 @@ def build_w1(
     device_executor=None,
     device_chain=None,
     device_controller=None,
+    device_budget=None,
 ) -> Workflow:
     keys, vals = datasets.tweets_stream(scale, seed)
     nkeys = datasets.NUM_LOCATIONS
     emit_rate = num_workers * service_rate          # join is the bottleneck
 
     eng = _engine(reference, partition_backend, batch_ticks,
-                  device_executor, device_chain, device_controller)
+                  device_executor, device_chain, device_controller,
+                  device_budget)
     src = eng.add_source(Source("tweets", keys, vals, emit_rate))
     filt = eng.add_op(Filter("filter", num_workers, emit_rate,
                              predicate=lambda k, v: np.ones(k.shape, dtype=bool)))
@@ -149,13 +152,15 @@ def build_w2(
     device_executor=None,
     device_chain=None,
     device_controller=None,
+    device_budget=None,
 ) -> Workflow:
     spec = datasets.DsbSpec()
     dates, items, custs, vals = datasets.dsb_sales(n_tuples, spec, seed)
     emit_rate = num_workers * service_rate
 
     eng = _engine(reference, partition_backend, batch_ticks,
-                  device_executor, device_chain, device_controller)
+                  device_executor, device_chain, device_controller,
+                  device_budget)
     # vals columns: [item, customer, amount] so downstream re-keys by item.
     payload = np.stack([items.astype(np.float64), custs.astype(np.float64), vals], axis=1)
     src = eng.add_source(Source("sales", dates, payload, emit_rate))
@@ -213,6 +218,7 @@ def build_w3(
     device_executor=None,
     device_chain=None,
     device_controller=None,
+    device_budget=None,
 ) -> Workflow:
     prices = datasets.tpch_orders(n_tuples, seed)
     bounds = datasets.price_ranges(num_workers * 2)   # 2 ranges per worker
@@ -221,7 +227,8 @@ def build_w3(
     emit_rate = num_workers * service_rate
 
     eng = _engine(reference, partition_backend, batch_ticks,
-                  device_executor, device_chain, device_controller)
+                  device_executor, device_chain, device_controller,
+                  device_budget)
     src = eng.add_source(Source("orders", rids, prices, emit_rate))
     sort = eng.add_op(_op_cls(RangeSort, reference)(
         "sort", num_workers, service_rate))
@@ -256,13 +263,15 @@ def build_w4(
     device_executor=None,
     device_chain=None,
     device_controller=None,
+    device_budget=None,
 ) -> Workflow:
     num_keys = 42
     keys, vals = datasets.synthetic_changing(n_tuples, num_keys, seed)
     emit_rate = num_workers * service_rate
 
     eng = _engine(reference, partition_backend, batch_ticks,
-                  device_executor, device_chain, device_controller)
+                  device_executor, device_chain, device_controller,
+                  device_budget)
     src = eng.add_source(Source("synthetic", keys, vals, emit_rate))
     join = eng.add_op(_op_cls(HashJoinProbe, reference)(
         "join", num_workers, service_rate))

@@ -1,0 +1,362 @@
+"""Spill-tier tests (out-of-core memory tiering of the device plane).
+
+Core invariant: with spill forced at tiny watermarks — a budget small
+enough that every edge spills repeatedly — ``Sink.series`` is
+bit-identical to the unspilled run on every plane (numpy / device-jit
+with fused chains and an armed DeviceController), including checkpoint
+fail/recover mid-spill, and memory pressure surfaces as structured
+``mem-pressure`` incidents consumed by the attached controller.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.core import ReshapeConfig
+from repro.dataflow import resilience as rs
+from repro.dataflow import spill as sp
+from repro.dataflow.engine import Engine, Source
+from repro.dataflow.operators import Filter, GroupByAgg, Sink
+from repro.dataflow.workflows import build_w1, build_w3
+
+try:
+    import jax  # noqa: F401
+    HAS_JAX = True
+except Exception:                                   # pragma: no cover
+    HAS_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAS_JAX, reason="jit plane needs jax")
+
+
+def _series_equal(a, b):
+    return (len(a) == len(b)
+            and all(t1 == t2 and np.array_equal(c1, c2)
+                    for (t1, c1), (t2, c2) in zip(a, b)))
+
+
+# --------------------------------------------------------------------- #
+# Units: config, segments, state                                         #
+# --------------------------------------------------------------------- #
+class TestSpillUnits:
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            sp.SpillConfig(budget_cells=0)
+        with pytest.raises(ValueError):
+            sp.SpillConfig(budget_cells=64, low_wm=0.9, high_wm=0.5)
+        cfg = sp.SpillConfig(budget_cells=100)
+        assert cfg.per_worker(4) == 25
+        assert cfg.per_worker(1000) == 8          # functional floor
+
+    def test_resolve_budget(self, monkeypatch):
+        monkeypatch.delenv("REPRO_DEVICE_BUDGET", raising=False)
+        assert sp.resolve_budget(None) is None
+        assert sp.resolve_budget(64).budget_cells == 64
+        cfg = sp.SpillConfig(budget_cells=32, high_wm=0.9, low_wm=0.1)
+        assert sp.resolve_budget(cfg) is cfg
+        monkeypatch.setenv("REPRO_DEVICE_BUDGET", "128")
+        assert sp.resolve_budget(None).budget_cells == 128
+
+    def test_segment_roundtrip_and_crc(self):
+        k = np.arange(10, dtype=np.int64)
+        v = np.linspace(0, 1, 10)
+        seg = sp.SpillSegment((k, v), 10)
+        assert seg.verify()
+        assert np.array_equal(seg.arrays[0], k)
+        seg.corrupt()
+        assert not seg.verify()
+
+    def test_state_ordering_and_prefetch(self):
+        cfg = sp.SpillConfig(budget_cells=64)
+        st_ = sp.SpillState(cfg, 2)
+        a = sp.SpillSegment((np.array([1, 2], np.int64),), 2)
+        b = sp.SpillSegment((np.array([3], np.int64),), 1)
+        c = sp.SpillSegment((np.array([4], np.int64),), 1)
+        st_.prepend_ring(0, b)       # eviction: newest resident -> front
+        st_.prepend_ring(0, a)       # older eviction goes in front of it
+        st_.append_ring(0, c)        # fresh overflow -> back
+        assert st_.ring_len(0) == 4 and st_.any()
+        st_.prefetch(0, lambda x: x)      # identity "upload"
+        seg, dev = st_.pop_ring_front(0)
+        assert seg is a and dev is not None       # prefetch hit
+        assert st_.prefetch_hits == 1
+        assert [s.n for s in st_.rings[0]] == [1, 1]
+        st_.clear()
+        assert not st_.any()
+
+    def test_corrupt_one_and_drain_raises(self):
+        cfg = sp.SpillConfig(budget_cells=64)
+        st_ = sp.SpillState(cfg, 1)
+        st_.append_rows(0, sp.SpillSegment(
+            (np.arange(4, dtype=np.int64),), 4))
+        assert st_.corrupt_one()
+        with pytest.raises(sp.SpillCorruptError):
+            st_.drain_rows(0)
+
+
+# --------------------------------------------------------------------- #
+# The acceptance workflow (ISSUE 10): W3 build state >= 4x the budget    #
+# --------------------------------------------------------------------- #
+@needs_jax
+class TestAcceptance:
+    def _run(self, budget=None, sanitize=False, **kw):
+        env = dict(os.environ)
+        if sanitize:
+            os.environ["REPRO_SANITIZE"] = "1"
+        try:
+            wf = build_w3(strategy="reshape", partition_backend="pallas",
+                          device_executor="jit", device_controller=True,
+                          device_budget=budget, **kw)
+            wf.run()
+        finally:
+            os.environ.clear()
+            os.environ.update(env)
+        return wf
+
+    def test_w3_4x_over_budget_stays_on_jit_plane(self):
+        # W3's sort row store holds all 40_000 rows; a 10_000-cell
+        # budget is exceeded >= 4x, and the rings spill on top of that.
+        ref = self._run()
+        wf = self._run(budget=10_000, sanitize=True)
+        inc = wf.engine.incidents
+        assert inc.count("demotion") == 0, inc.kinds()
+        assert inc.count("mem-pressure") >= 1
+        assert _series_equal(wf.sink.series, ref.sink.series)
+        assert wf.controllers[0].pressure_consumed >= 1
+        assert wf.controllers[0].pressure_events == []
+        # the device plane stayed armed end to end on every edge
+        for e in wf.engine.edges:
+            assert not (e.device_plane or "").startswith("demoted")
+
+    def test_w1_probe_with_budget_bit_identical(self):
+        ref = build_w1(strategy="none", scale=0.05,
+                       partition_backend="pallas", device_executor="jit")
+        ref.run()
+        env = dict(os.environ)
+        os.environ["REPRO_SANITIZE"] = "1"
+        try:
+            wf = build_w1(strategy="none", scale=0.05,
+                          partition_backend="pallas", device_executor="jit",
+                          device_budget=256)
+            wf.run()
+        finally:
+            os.environ.clear()
+            os.environ.update(env)
+        assert wf.engine.incidents.count("demotion") == 0
+        assert _series_equal(wf.sink.series, ref.sink.series)
+
+
+# --------------------------------------------------------------------- #
+# Propcheck invariance: tiny watermarks, every plane, chaos mid-spill    #
+# --------------------------------------------------------------------- #
+def _pipeline(plane="numpy", *, budget=None, n=3000, num_keys=24,
+              num_workers=4, chunk=8, batch_ticks=4, hot_frac=0.3,
+              seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.minimum(rng.zipf(1.3, n) - 1, num_keys - 1).astype(np.int64)
+    if hot_frac:
+        keys[rng.random(n) < hot_frac] = 0
+    vals = rng.uniform(0.0, 10.0, n)
+    kw = dict(batch_ticks=batch_ticks)
+    if plane == "jit":
+        kw.update(partition_backend="pallas", device_executor="jit",
+                  device_controller=True, device_budget=budget)
+    eng = Engine(**kw)
+    src = eng.add_source(Source("src", keys, vals, num_workers * chunk))
+    filt = eng.add_op(Filter("filter", num_workers, num_workers * chunk,
+                             predicate=lambda k, v: v >= 0))
+    grp = eng.add_op(GroupByAgg("groupby", num_workers, chunk))
+    sink = eng.add_op(Sink("sink", num_keys, snapshot_every=batch_ticks))
+    eng.connect(src, filt, num_keys)
+    eng.connect(filt, grp, num_keys)
+    eng.connect(grp, sink, num_keys)
+    ctrl = eng.attach_controller(grp, ReshapeConfig(metric_period=4))
+    return eng, sink, ctrl
+
+
+_REF = {}
+
+
+def _ref_series(seed, plane="jit"):
+    """The unspilled baseline, per plane: snapshot timelines are only
+    comparable within one plane (the armed device controller lifts the
+    metric-grid clamp, so jit and numpy partition windows differently)."""
+    if (plane, seed) not in _REF:
+        eng, sink, _ = _pipeline(plane, budget=None, seed=seed)
+        eng.run()
+        _REF[(plane, seed)] = sink.series
+    return _REF[(plane, seed)]
+
+
+@needs_jax
+class TestSpillInvariance:
+    def test_budget_is_inert_on_the_numpy_plane(self, monkeypatch):
+        """No device runtimes -> the env budget changes nothing."""
+        ref = _ref_series(0, "numpy")
+        monkeypatch.setenv("REPRO_DEVICE_BUDGET", "48")
+        eng, sink, _ = _pipeline("numpy", seed=0)
+        eng.run()
+        assert _series_equal(sink.series, ref)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_tiny_budget_bit_identical(self, seed):
+        """Any tiny budget (every edge spills repeatedly), any stream
+        seed: the jit plane with fused chains and an armed controller
+        matches its own unspilled run bit-exactly."""
+        stream = seed % 3
+        budget = [48, 64, 96, 128][seed % 4]
+        ref = _ref_series(stream)
+        eng, sink, _ = _pipeline("jit", budget=budget, seed=stream)
+        eng.run()
+        assert _series_equal(sink.series, ref), (
+            f"seed={seed} budget={budget}")
+        assert eng.incidents.count("demotion") == 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_chaos_mid_spill_bit_identical(self, seed):
+        """Checkpoint fail/recover (and the rest of the taxonomy,
+        including the new kinds) while the spill tier is active."""
+        ref = _ref_series(0)
+        eng, sink, _ = _pipeline("jit", budget=64, seed=0)
+        plan = rs.FaultPlan.from_seed(seed, max_tick=70)
+        runner = rs.ChaosRunner(eng, plan, every_ticks=16)
+        runner.run()
+        assert _series_equal(sink.series, ref), (
+            f"seed={seed} plan={plan.describe()}")
+
+
+# --------------------------------------------------------------------- #
+# Directed chaos: the two new fault kinds                                #
+# --------------------------------------------------------------------- #
+@needs_jax
+class TestChaosKinds:
+    def test_mem_pressure_budget_shrink(self):
+        """A mid-run budget shrink forces spill; healed in place (undo
+        only, no rollback), results bit-identical."""
+        ref = _ref_series(0)
+        eng, sink, _ = _pipeline("jit", budget=None, seed=0)
+        runner = rs.ChaosRunner(
+            eng, rs.FaultPlan([rs.FaultEvent(rs.MEM_PRESSURE, 20,
+                                             duration=12, target=1)]),
+            every_ticks=16)          # target=1: the groupby runtime
+        runner.run()
+        assert _series_equal(sink.series, ref)
+        assert runner.injected[rs.MEM_PRESSURE] == 1
+        assert eng.incidents.count("fault", cause="mem-pressure") == 1
+        assert eng.incidents.count("mem-pressure") >= 1   # spill engaged
+        assert eng.incidents.count("recovery") == 0       # no rollback
+        # undo restored the unbounded budget
+        assert all(o.device is None or o.device.budget_cfg is None
+                   for o in eng.ops)
+
+    def test_spill_corrupt_recovers_from_cut(self):
+        """A CRC-corrupted spill segment is discarded by rollback to the
+        last valid cut; results bit-identical."""
+        ref = _ref_series(0)
+        eng, sink, _ = _pipeline("jit", budget=48, seed=0)
+        runner = rs.ChaosRunner(
+            eng, rs.FaultPlan([rs.FaultEvent(rs.SPILL_CORRUPT, 40)]),
+            every_ticks=8)
+        runner.run()
+        assert _series_equal(sink.series, ref)
+        assert runner.injected[rs.SPILL_CORRUPT] == 1
+        assert eng.incidents.count("recovery") == 1
+        inc = eng.incidents.query("fault", cause="spill-corrupt")
+        assert len(inc) == 1
+
+    def test_crc_failure_raises_and_records(self):
+        """Direct CRC-failure path: a poisoned segment read back at a
+        sync boundary raises and records a spill-corrupt incident."""
+        eng, sink, _ = _pipeline("jit", budget=48, seed=0)
+        corrupted = False
+        while not eng.done():
+            eng.run_super_tick(1)
+            for o in eng.ops:
+                rt = o.device
+                if (not corrupted and rt is not None
+                        and rt.spill is not None and rt.spill.corrupt_one()):
+                    corrupted = True
+                    with pytest.raises(sp.SpillCorruptError):
+                        while not eng.done():      # hits refill/sync soon
+                            eng.run_super_tick(1)
+                            for o2 in eng.ops:
+                                if o2.device is not None:
+                                    o2.device.sync_host()
+                    assert eng.incidents.count("spill-corrupt") >= 1
+                    return
+        pytest.fail("no spill segment ever existed to corrupt")
+
+
+# --------------------------------------------------------------------- #
+# Degradation paths: regrow cap, chunked probe emission                  #
+# --------------------------------------------------------------------- #
+@needs_jax
+class TestDegradation:
+    def test_regrow_capped_incident_once(self):
+        """Ring regrowth past the budget-implied cap (a single burst
+        bigger than the budget itself) surfaces one structured
+        ``regrow-capped`` incident — and still grows, correctness over
+        the budget."""
+        num_keys = 8
+        rng = np.random.default_rng(1)
+        keys = rng.integers(0, num_keys, 64).astype(np.int64)
+        vals = rng.uniform(0, 1, 64)
+        eng = Engine(partition_backend="pallas", device_executor="jit",
+                     device_budget=sp.SpillConfig(budget_cells=16))
+        src = eng.add_source(Source("src", keys, vals, 8))
+        grp = eng.add_op(GroupByAgg("groupby", 2, 1))
+        sink = eng.add_op(Sink("sink", num_keys))
+        eng.connect(src, grp, num_keys)
+        eng.connect(grp, sink, num_keys)
+        eng.run_super_tick(1)          # small first burst -> small cap
+        for n_burst in (600, 1200):    # bursts way past the budget cap
+            k = rng.integers(0, num_keys, n_burst).astype(np.int64)
+            src.out_edge.send((k, rng.uniform(0, 1, n_burst)))
+            eng.run_super_tick(1)
+        assert eng.incidents.count("regrow-capped") == 1   # one-time
+
+    def test_probe_cliff_becomes_chunked_emission(self, monkeypatch):
+        """With a budget configured, a probe whose padded emit buffer
+        would blow MAX_EMIT_CELLS emits in sub-budget chunks
+        (``degraded-emit``) instead of demoting — bit-identical."""
+        from repro.dataflow import device as dev
+        ref = build_w1(strategy="none", scale=0.02,
+                       partition_backend="pallas", device_executor="jit")
+        ref.run()
+        monkeypatch.setattr(dev, "MAX_EMIT_CELLS", 1 << 7)
+        wf = build_w1(strategy="none", scale=0.02,
+                      partition_backend="pallas", device_executor="jit",
+                      device_budget=100_000)
+        wf.run()
+        inc = wf.engine.incidents
+        assert inc.count("degraded-emit") == 1
+        assert inc.count("demotion", cause="probe fanout") == 0
+        assert _series_equal(wf.sink.series, ref.sink.series)
+
+
+# --------------------------------------------------------------------- #
+# Sanitizer: the spill cross-check                                       #
+# --------------------------------------------------------------------- #
+@needs_jax
+class TestSanitizeSpill:
+    def test_forked_spill_mirror_trips(self, monkeypatch):
+        from repro.analysis.sanitize import SanitizeError
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        eng, sink, _ = _pipeline("jit", budget=48, seed=0)
+        forked = False
+        with pytest.raises(SanitizeError):
+            while not eng.done():
+                eng.run_super_tick(1)
+                for o in eng.ops:
+                    rt = o.device
+                    if (not forked and rt is not None
+                            and rt.spilled_lens.sum() > 0):
+                        rt.spilled_lens[0] += 1        # fork the mirror
+                        forked = True
+                    if forked and rt is not None:
+                        rt.sync_host()
+        assert forked
+        assert eng.incidents.count("sanitize-spill") >= 1
